@@ -1,0 +1,37 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import GNNLayerWorkload
+from repro.graphs import TABLE4, load_dataset
+
+G_HIDDEN = 16  # Kipf-standard GCN hidden width (see EXPERIMENTS.md)
+OUT_DIR = Path(__file__).resolve().parent.parent / "experiments" / "benchmarks"
+
+
+def workloads(datasets=None):
+    for name in datasets or TABLE4:
+        g, spec = load_dataset(name)
+        yield name, spec, GNNLayerWorkload(g.nnz, spec.n_features, G_HIDDEN, name=name)
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # microseconds
+
+
+def emit(rows: list[tuple[str, float, str]]):
+    """Print the assignment CSV: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name: str, payload):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=2))

@@ -1,0 +1,35 @@
+"""Paper Fig. 11: Global Buffer access breakdown by operand (Adj/Inp/Int/
+Wt/Op/Psum) for Mutag (LEF) and Citeseer (HF)."""
+from __future__ import annotations
+
+from repro.core import TABLE5_NAMES, named_skeleton, optimize_tiles
+
+from .common import emit, save_json, timed, workloads
+
+
+def run():
+    rows, table = [], {}
+    for name, spec, wl in workloads(["mutag", "citeseer"]):
+        table[name] = {}
+        for sk in TABLE5_NAMES:
+            try:
+                res, us = timed(
+                    optimize_tiles, named_skeleton(sk), wl,
+                    objective="cycles", pe_splits=(0.25, 0.5, 0.75),
+                )
+            except (RuntimeError, ValueError):
+                continue
+            acc = res.stats.gb_accesses
+            table[name][sk] = acc
+            top = max(acc, key=acc.get)
+            rows.append((f"fig11/{name}/{sk}", us, f"dominant={top}"))
+    save_json("fig11_gb_breakdown", table)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Fig. 12: PP runtimes under 25-75 / 50-50 / 75-25 PE allocations
+(load balancing across the aggregation/combination engines)."""
+from __future__ import annotations
+
+from repro.core import named_skeleton, optimize_tiles
+
+from .common import emit, save_json, timed, workloads
+
+DATASETS = ["collab", "mutag", "citeseer"]
+
+
+def run():
+    rows, table = [], {}
+    for name, spec, wl in workloads(DATASETS):
+        table[name] = {}
+        base = None
+        for split in (0.25, 0.5, 0.75):
+            res, us = timed(
+                optimize_tiles, named_skeleton("PP-Nt-Vt/sl"), wl,
+                objective="cycles", pe_splits=(split,),
+            )
+            cyc = res.stats.cycles
+            if split == 0.5:
+                base = cyc
+            table[name][f"{int(split*100)}-{100-int(split*100)}"] = cyc
+            rows.append((f"fig12/{name}/{int(split*100)}-{100-int(split*100)}",
+                         us, f"cycles={cyc:.0f}"))
+        best = min(table[name], key=table[name].get)
+        rows.append((f"fig12/{name}/best_alloc", 0.0, best))
+    save_json("fig12_pe_allocation", table)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

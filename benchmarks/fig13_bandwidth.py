@@ -1,0 +1,42 @@
+"""Paper Fig. 13: runtime vs Global-Buffer bandwidth (512/256/128/64
+elements-per-cycle), tiles FIXED at the bw=512 optimum — PP suffers most
+because both phases share the bandwidth."""
+from __future__ import annotations
+
+from repro.core import AcceleratorConfig, named_skeleton, optimize_tiles, simulate
+
+from .common import emit, save_json, timed, workloads
+
+FLOWS = ("Seq-Nt", "Seq-Ns", "SP-FsNt-Fs", "PP-Nt-Vt/sl", "PP-Nt-Vsh")
+
+
+def run():
+    rows, table = [], {}
+    for name, spec, wl in workloads(["citeseer", "collab"]):
+        table[name] = {}
+        for sk in FLOWS:
+            res = optimize_tiles(
+                named_skeleton(sk), wl, AcceleratorConfig(gb_bandwidth=512),
+                objective="cycles", pe_splits=(0.5,),
+            )
+            ref = None
+            series = {}
+            for bw in (512, 256, 128, 64):
+                s, us = timed(
+                    simulate, res.dataflow, wl, AcceleratorConfig(gb_bandwidth=bw)
+                )
+                ref = ref or s.cycles
+                series[bw] = s.cycles / ref
+            table[name][sk] = series
+            rows.append((f"fig13/{name}/{sk}", us,
+                         f"slowdown@64={series[64]:.2f}x"))
+    save_json("fig13_bandwidth", table)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

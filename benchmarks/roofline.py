@@ -1,0 +1,44 @@
+"""Assignment §Roofline: aggregate the dry-run JSONs into the per-cell
+roofline table (compute/memory/collective terms, dominant bottleneck)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.launch.roofline import format_table
+
+from .common import emit
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_results():
+    out = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def run():
+    results = load_results()
+    rows = []
+    for r in results:
+        if r.get("skipped"):
+            continue
+        rf = r["roofline"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r.get("compile_s", 0) * 1e6,
+            f"bound={rf['dominant_term']};RF={rf['roofline_fraction']:.3f}",
+        ))
+    return rows
+
+
+def main():
+    results = load_results()
+    print(format_table(results))
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,...] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment format).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    fig9_runtime,
+    fig10_energy,
+    fig11_gb_breakdown,
+    fig12_pe_allocation,
+    fig13_bandwidth,
+    table3_validation,
+    roofline,
+)
+from .common import emit
+
+MODULES = {
+    "fig9": fig9_runtime,
+    "fig10": fig10_energy,
+    "fig11": fig11_gb_breakdown,
+    "fig12": fig12_pe_allocation,
+    "fig13": fig13_bandwidth,
+    "table3": table3_validation,
+    "roofline": roofline,
+}
+
+FAST_DATASETS = ["mutag", "collab", "citeseer"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--fast", action="store_true",
+                    help="3 representative datasets for fig9/fig10")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    for n in names:
+        mod = MODULES[n]
+        t0 = time.time()
+        if n in ("fig9", "fig10") and args.fast:
+            rows = mod.run(FAST_DATASETS)
+        else:
+            rows = mod.run()
+        emit(rows)
+        print(f"# {n} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Design-space exploration: sweep the Table-5 dataflows over every
+Table-4 dataset and print the full comparison (the paper's Figs 9-10 as
+one table), plus the mapper's per-dataset winner.
+
+    PYTHONPATH=src python examples/dataflow_explorer.py
+"""
+from repro.core import GNNLayerWorkload, TABLE5_NAMES, named_skeleton, optimize_tiles
+from repro.graphs import TABLE4, load_dataset
+
+G_HIDDEN = 16
+
+print(f"{'dataset':12s} {'cat':4s} | " + " ".join(f"{n:>12s}" for n in TABLE5_NAMES))
+for name in TABLE4:
+    g, spec = load_dataset(name)
+    wl = GNNLayerWorkload(g.nnz, spec.n_features, G_HIDDEN, name=name)
+    base = None
+    cells = []
+    best = (None, float("inf"))
+    for sk in TABLE5_NAMES:
+        try:
+            r = optimize_tiles(named_skeleton(sk), wl, objective="cycles",
+                               pe_splits=(0.25, 0.5, 0.75))
+            c = r.stats.cycles
+            base = base or c
+            cells.append(f"{c / base:12.2f}")
+            if c < best[1]:
+                best = (sk, c)
+        except Exception:
+            cells.append(f"{'—':>12s}")
+    print(f"{name:12s} {spec.category:4s} | " + " ".join(cells) + f"   best={best[0]}")

@@ -1,0 +1,32 @@
+"""The paper's Parallel-Pipeline dataflow across two device groups.
+
+Launches with 2 virtual devices: group 0 aggregates row band i while
+group 1 runs the combination GEMM on band i-1, handing off via
+collective_permute (Table 2 "NoC connecting Agg and Cmb units").
+
+    PYTHONPATH=src python examples/gnn_parallel_pipeline.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gnn import EllAdjacency, multiphase_matmul
+from repro.graphs import load_dataset
+
+g, spec = load_dataset("mutag")
+adj = EllAdjacency.from_csr(g)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(g.n_nodes, spec.n_features)).astype(np.float32))
+w = jnp.asarray(rng.normal(size=(spec.n_features, 16)).astype(np.float32))
+
+mesh = jax.make_mesh((2,), ("phase",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+ref = multiphase_matmul(adj, x, w, policy="seq")
+out = multiphase_matmul(adj, x, w, policy="pp", mesh=mesh)
+err = float(jnp.abs(out - ref).max())
+print(f"PP across 2 device groups: V={g.n_nodes} bands handed off via ppermute")
+print(f"max |PP - Seq| = {err:.2e}  ({'OK' if err < 1e-3 else 'MISMATCH'})")

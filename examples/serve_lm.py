@@ -1,0 +1,14 @@
+"""Batched serving example (deliverable b): prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch tinyllama-1.1b]
+
+Uses the reduced config on CPU; the identical serve path is what the
+decode_32k / long_500k dry-run cells lower for the production mesh.
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(["--reduced", "--batch", "4", "--prompt-len", "16",
+                   "--new-tokens", "12", *sys.argv[1:]]))

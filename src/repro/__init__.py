@@ -1,0 +1,2 @@
+"""repro — multiphase sparse/dense dataflows (Garg et al. 2021) as a
+JAX/TPU framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""

@@ -1,0 +1,155 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout:  <dir>/step_<n>/{manifest.json, arrays/<leaf-id>.npy}
+Writes go to a temp directory and are atomically renamed, so a preemption
+mid-save can never corrupt the latest checkpoint (the fault-tolerance
+contract).  ``keep`` old checkpoints are retained.
+
+Restore takes optional target shardings, so a checkpoint written on one
+mesh can be loaded onto another (elastic re-scaling — tested in
+tests/test_checkpoint.py with different host-device counts).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3, async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._queue: queue.Queue | None = None
+        self._worker = None
+        self._error: Exception | None = None
+        if async_save:
+            self._queue = queue.Queue(maxsize=2)
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, state: dict) -> None:
+        """state: pytree dict (params/opt/data/step...).  Async if enabled."""
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.asarray(x) if hasattr(x, "shape") else x, state
+        )
+        if self._queue is not None:
+            if self._error:
+                raise self._error
+            self._queue.put((step, host_state))
+        else:
+            self._write(step, host_state)
+
+    def wait(self) -> None:
+        if self._queue is not None:
+            self._queue.join()
+            if self._error:
+                raise self._error
+
+    def _drain(self):
+        while True:
+            step, state = self._queue.get()
+            try:
+                self._write(step, state)
+            except Exception as e:  # surfaced on next save()/wait()
+                self._error = e
+            finally:
+                self._queue.task_done()
+
+    def _write(self, step: int, state: dict) -> None:
+        final = self.dir / f"step_{step}"
+        tmp = self.dir / f".tmp_step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        (tmp / "arrays").mkdir(parents=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (key, leaf) in enumerate(_leaf_paths(state)):
+            if leaf is None:
+                manifest["leaves"].append({"key": key, "none": True})
+                continue
+            arr = np.asarray(leaf)
+            fname = f"{i:05d}.npy"
+            np.save(tmp / "arrays" / fname, arr, allow_pickle=False)
+            manifest["leaves"].append(
+                {"key": key, "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+            )
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m and (p / "manifest.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        """Rebuild the pytree ``like`` from disk.  ``shardings`` (a pytree of
+        NamedSharding or None) re-shards onto the current mesh — the elastic
+        path: a checkpoint from N hosts restores onto M."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        root = self.dir / f"step_{step}"
+        manifest = json.loads((root / "manifest.json").read_text())
+        by_key = {l["key"]: l for l in manifest["leaves"]}
+
+        expect = _leaf_paths(like)
+        shard_leaves = (
+            [s for _, s in _leaf_paths(shardings)] if shardings is not None else [None] * len(expect)
+        )
+        leaves = []
+        for (key, leaf_like), shd in zip(expect, shard_leaves):
+            entry = by_key.get(key)
+            if entry is None:
+                raise KeyError(f"checkpoint at step {step} missing leaf {key!r}")
+            if entry.get("none"):
+                leaves.append(None)
+                continue
+            arr = np.load(root / "arrays" / entry["file"])
+            if hasattr(leaf_like, "dtype"):
+                arr = arr.astype(leaf_like.dtype)
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

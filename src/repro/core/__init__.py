@@ -1,0 +1,24 @@
+from .taxonomy import (
+    Binding,
+    GNNDataflow,
+    Granularity,
+    InterPhase,
+    IntraPhaseDataflow,
+    Loop,
+    PhaseOrder,
+    enumerate_dataflows,
+    intra,
+    named_dataflow,
+)
+from .hw import AcceleratorConfig, TPUChipConfig, DEFAULT_ACCEL, TPU_V5E
+from .cost_model import (
+    GNNLayerWorkload,
+    PhaseCost,
+    aggregation_cost,
+    combination_cost,
+    pipelined_elements,
+    table3_buffering,
+)
+from .simulator import RunStats, simulate, simulate_model
+from .mapper import MappingResult, TABLE5_NAMES, optimize_tiles, search_dataflows
+from .taxonomy import DataflowSkeleton, SkeletonPhase, Cons, named_skeleton, SKELETONS

@@ -1,0 +1,61 @@
+"""Hardware abstraction for the spatial-accelerator model (paper Sec. 2.2).
+
+Also carries the TPU-v5e constants used by the roofline analysis in
+:mod:`repro.launch.roofline` so every hardware number lives in one place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class AcceleratorConfig:
+    """A templated flexible spatial accelerator (MAERI/SIGMA-like).
+
+    The paper's substrate: a flat array of ``n_pes`` MAC units with private
+    RFs, a shared Global Buffer, and configurable distribution/reduction
+    networks.  ``gb_bandwidth`` is the number of elements that can be moved
+    between the Global Buffer and the PE array per cycle (paper Fig. 13
+    sweeps this).
+    """
+
+    n_pes: int = 512
+    gb_bandwidth: int = 512  # elements / cycle, distribution + reduction
+    gb_capacity_bytes: int | None = None  # None = sufficient (paper Sec 5.1.2)
+    bytes_per_elem: int = 4
+    # Energy constants from Dally et al. (paper Sec 5.2.2)
+    gb_energy_pj: float = 1.046  # per access, 1 MB bank
+    rf_energy_pj: float = 0.053  # per access, per-PE register file
+    gb_bank_bytes: int = 1 << 20  # reference bank size for energy scaling
+    # Scaling exponent for access energy vs buffer capacity (CACTI-like
+    # sqrt scaling; the paper only states that smaller intermediate buffers
+    # cost less per access — we make that concrete and document it).
+    buffer_energy_exponent: float = 0.5
+    dram_energy_pj: float = 100.0  # only used when gb_capacity is exceeded
+
+    def buffer_access_energy(self, capacity_bytes: int) -> float:
+        """Energy per access for a buffer of the given capacity (pJ)."""
+        if capacity_bytes <= 0:
+            return self.rf_energy_pj
+        ratio = (capacity_bytes / self.gb_bank_bytes) ** self.buffer_energy_exponent
+        return float(
+            min(
+                max(self.gb_energy_pj * ratio, self.rf_energy_pj),
+                self.dram_energy_pj,
+            )
+        )
+
+
+#: TPU v5e single-chip constants for the roofline model (assignment spec).
+@dataclass(frozen=True)
+class TPUChipConfig:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12  # FLOP/s per chip
+    hbm_bandwidth: float = 819e9  # bytes/s
+    ici_link_bandwidth: float = 50e9  # bytes/s per link
+    hbm_capacity: float = 16e9  # bytes
+    vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB
+
+
+DEFAULT_ACCEL = AcceleratorConfig()
+TPU_V5E = TPUChipConfig()

@@ -1,0 +1,197 @@
+"""Mapping optimizer over the multiphase dataflow space.
+
+The paper (Sec. 6, "Mapping Optimizer") leaves automatic search as future
+work; we implement it here on top of the taxonomy + simulator: take a
+dataflow *skeleton* (loop orders + the paper's s/t/x binding constraints),
+search power-of-two tile sizes and PP PE splits under the PE budget, and
+rank by cycles / energy / EDP.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .cost_model import GNNLayerWorkload
+from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .simulator import RunStats, simulate
+from .taxonomy import (
+    Cons,
+    DataflowSkeleton,
+    GNNDataflow,
+    InterPhase,
+    PhaseOrder,
+    SKELETONS,
+    SkeletonPhase,
+    named_skeleton,
+)
+
+
+def _pow2_up_to(extent: int, cap: int) -> list[int]:
+    """Tile-size candidates: powers of two plus 3*2^k (so non-power-of-two
+    PE partitions like 384 = 3*128 can be filled exactly)."""
+    lim = min(max(extent, 1) * 2 - 1, cap)
+    out, t = [1], 2
+    while t <= lim:
+        out.append(t)
+        if 3 * t // 2 <= lim and 3 * t // 2 not in out:
+            out.append(3 * t // 2)
+        t *= 2
+    return sorted(out)
+
+
+def _dim_candidates(
+    phase: SkeletonPhase, dim: str, extent: int, budget: int
+) -> list[int]:
+    fx = phase.fixed_tile(dim)
+    if fx:
+        return [min(fx, budget)]
+    c = phase.constraint(dim)
+    full = _pow2_up_to(extent, budget)
+    if c == Cons.T:
+        return [1]
+    if c == Cons.X:
+        return full
+    if c == Cons.S:
+        return [t for t in full if t > 1] or [1]
+    if c == Cons.S_HIGH:
+        hi = [t for t in full if t >= max(2, budget // 8)]
+        return hi or [t for t in full if t > 1][-1:] or [1]
+    if c == Cons.S_LOW:
+        return [t for t in full if t <= 8]
+    if c == Cons.S_FULL:
+        return [budget]  # the rigid-substrate case: all PEs on this dim
+    raise AssertionError(c)
+
+
+def _phase_tilings(
+    phase: SkeletonPhase,
+    extents: dict[str, int],
+    budget: int,
+    min_fill: float = 0.25,
+) -> list[dict[str, int]]:
+    """Tilings whose spatial footprint fits the PE budget, preferring ones
+    that fill at least ``min_fill`` of it."""
+    dims = list(phase.order)
+    cands = {d: _dim_candidates(phase, d, extents[d], budget) for d in dims}
+    out, loose = [], []
+    for combo in itertools.product(*(cands[d] for d in dims)):
+        fp = int(np.prod(combo))
+        if fp > budget:
+            continue
+        t = dict(zip(dims, combo))
+        loose.append(t)
+        if fp >= max(1, int(budget * min_fill)):
+            out.append(t)
+    return out or loose
+
+
+@dataclass
+class MappingResult:
+    dataflow: GNNDataflow
+    stats: RunStats
+    skeleton: str = ""
+
+    def objective(self, name: str) -> float:
+        if name == "cycles":
+            return self.stats.cycles
+        if name == "energy":
+            return self.stats.energy_pj
+        if name == "edp":
+            return self.stats.cycles * self.stats.energy_pj
+        raise KeyError(name)
+
+
+def optimize_tiles(
+    skeleton: DataflowSkeleton,
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    objective: str = "edp",
+    pe_splits: tuple[float, ...] = (0.5,),
+    max_evals: int = 4096,
+) -> MappingResult:
+    """Search tile sizes (and PP PE splits) for a dataflow skeleton."""
+    feat = wl.f_in if skeleton.order == PhaseOrder.AC else wl.g_out
+    agg_ext = {"V": wl.v, "N": max(int(wl.nnz.max()), 1), "F": feat}
+    cmb_ext = {"V": wl.v, "G": wl.g_out, "F": wl.f_in}
+    splits = pe_splits if skeleton.inter == InterPhase.PP else (0.5,)
+
+    best: MappingResult | None = None
+    for split in splits:
+        if skeleton.inter == InterPhase.PP:
+            pe_first = max(1, int(round(hw.n_pes * split)))
+            pe_second = max(1, hw.n_pes - pe_first)
+            if skeleton.order == PhaseOrder.AC:
+                b_agg, b_cmb = pe_first, pe_second
+            else:
+                b_agg, b_cmb = pe_second, pe_first
+        else:
+            b_agg = b_cmb = hw.n_pes
+
+        agg_tilings = _phase_tilings(skeleton.agg, agg_ext, b_agg)
+        if skeleton.sp_optimized:
+            pairs = []
+            for at in agg_tilings:
+                if at.get("N", 1) != 1:
+                    continue  # SP-Optimized: temporal reduction (T_N = 1)
+                ct = {"V": at["V"], "F": at["F"], "G": 1}
+                if at["V"] * at["F"] <= b_cmb:
+                    pairs.append((at, ct))
+        else:
+            cmb_tilings = _phase_tilings(skeleton.cmb, cmb_ext, b_cmb)
+            pairs = list(itertools.product(agg_tilings, cmb_tilings))
+        if len(pairs) > max_evals:
+            idx = np.linspace(0, len(pairs) - 1, max_evals).astype(int)
+            pairs = [pairs[i] for i in idx]
+        for at, ct in pairs:
+            df = skeleton.concretize(at, ct, pe_split=split)
+            try:
+                stats = simulate(df, wl, hw)
+            except ValueError:
+                continue
+            res = MappingResult(df, stats, skeleton=skeleton.name)
+            if best is None or res.objective(objective) < best.objective(objective):
+                best = res
+    if best is None:
+        raise RuntimeError(f"no legal tiling found for {skeleton.name}")
+    return best
+
+
+#: The paper's Table 5 evaluation set.
+TABLE5_NAMES = (
+    "Seq-Nt",
+    "Seq-Ns",
+    "SP-FsNt-Fs",
+    "SP-VsNt-Vs",
+    "High-Vs-SP",
+    "PP-Nt-Vt/sl",
+    "PP-Ns-Vt/sl",
+    "PP-Nt-Vsh",
+    "PP-Ns-Vsh",
+)
+
+
+def search_dataflows(
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    objective: str = "edp",
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+) -> list[MappingResult]:
+    """Rank dataflow skeletons (default: the paper's Table 5 set) for a
+    workload.  Returns results sorted by the objective — this is the
+    workload-adaptive dataflow choice the paper argues flexible
+    accelerators enable."""
+    out = []
+    for n in names:
+        try:
+            out.append(
+                optimize_tiles(
+                    named_skeleton(n), wl, hw, objective=objective, pe_splits=pe_splits
+                )
+            )
+        except (RuntimeError, ValueError):
+            continue
+    out.sort(key=lambda r: r.objective(objective))
+    return out

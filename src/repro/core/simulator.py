@@ -1,0 +1,308 @@
+"""Tile-level simulator for multiphase GNN dataflows (paper Sec. 5.1.1).
+
+Composes the per-phase cost model (:mod:`repro.core.cost_model`) under the
+four inter-phase strategies of the paper (Seq / SP-Generic / SP-Optimized /
+PP at element/row/column granularity), producing runtime, energy breakdown
+and buffering statistics — the quantities behind the paper's Figures 9-13
+and Table 3.
+
+Pipeline-parallel (PP) runtime follows Sec. 4.3: the accelerator's PEs are
+split between the phases (``pe_split``), the intermediate matrix is chunked
+at the dataflow's granularity and the two phases advance in a two-stage
+pipeline whose per-chunk latency is the max of the two phases — so
+unstructured sparsity shows up directly as pipeline bubbles (the paper's
+Collab case).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cost_model import (
+    GNNLayerWorkload,
+    PhaseCost,
+    aggregation_cost,
+    combination_cost,
+    pipelined_elements,
+    table3_buffering,
+    _ceil,
+    _tiles_of,
+)
+from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .taxonomy import GNNDataflow, InterPhase, PhaseOrder, Granularity
+
+
+@dataclass
+class RunStats:
+    """Simulated execution statistics for one GNN layer."""
+
+    dataflow: str
+    cycles: float
+    energy_pj: float
+    energy_breakdown: dict[str, float]
+    gb_accesses: dict[str, float]  # element counts per logical operand
+    rf_accesses: float
+    buffering_elems: float
+    macs: float
+    pe_utilization: float
+    stall_factor: float
+    agg_cycles: float
+    cmb_cycles: float
+
+    @property
+    def gb_total(self) -> float:
+        return sum(self.gb_accesses.values())
+
+
+def _merge(into: dict[str, float], src: dict[str, float], rename: dict[str, str]):
+    for k, val in src.items():
+        key = rename.get(k, k)
+        into[key] = into.get(key, 0.0) + val
+
+
+def _phase_costs(
+    df: GNNDataflow,
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig,
+    pe_agg: int,
+    pe_cmb: int,
+):
+    """Evaluate both phases.  Returns (agg, cmb, first_traffic,
+    second_traffic) where each traffic dict uses canonical operand labels
+    (adj/inp/wt/out/psum_rd/psum_wr/int_rd/int_wr): the intermediate matrix
+    is written by the first phase and read by the second."""
+    feat = wl.f_in if df.order == PhaseOrder.AC else wl.g_out
+    agg = aggregation_cost(df.agg, wl.nnz, feat, hw, pe_budget=pe_agg)
+    cmb = combination_cost(df.cmb, wl.v, wl.g_out, wl.f_in, hw, pe_budget=pe_cmb)
+    first_c, second_c = (agg, cmb) if df.order == PhaseOrder.AC else (cmb, agg)
+    first: dict[str, float] = {}
+    second: dict[str, float] = {}
+    if df.order == PhaseOrder.AC:
+        _merge(first, agg.gb_reads, {"adj": "adj", "inp": "inp", "psum": "psum_rd"})
+        _merge(first, agg.gb_writes, {"out": "int_wr", "psum": "psum_wr"})
+        _merge(second, cmb.gb_reads, {"inp": "int_rd", "wt": "wt", "psum": "psum_rd"})
+        _merge(second, cmb.gb_writes, {"out": "out", "psum": "psum_wr"})
+    else:
+        _merge(first, cmb.gb_reads, {"inp": "inp", "wt": "wt", "psum": "psum_rd"})
+        _merge(first, cmb.gb_writes, {"out": "int_wr", "psum": "psum_wr"})
+        _merge(second, agg.gb_reads, {"adj": "adj", "inp": "int_rd", "psum": "psum_rd"})
+        _merge(second, agg.gb_writes, {"out": "out", "psum": "psum_wr"})
+    return agg, cmb, first_c, second_c, first, second
+
+
+def _pp_chunk_times(
+    df: GNNDataflow,
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig,
+    pe_agg: int,
+    pe_cmb: int,
+    agg_total: float,
+    cmb_total: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-chunk (producer, consumer) cycle arrays at the dataflow's
+    pipelining granularity.  Exact row-band accounting for AC (captures
+    evil-row bubbles); proportional chunking for CA (documented
+    approximation — AWB-GCN's column granularity is uniform per column,
+    where proportional is exact)."""
+    gran = df.granularity
+    feat = wl.f_in if df.order == PhaseOrder.AC else wl.g_out
+
+    if df.order == PhaseOrder.CA:
+        if gran == Granularity.ROW:
+            n_chunks = int(_ceil(wl.v, max(df.cmb.tile("V"), df.agg.tile("N"))))
+        elif gran == Granularity.COLUMN:
+            n_chunks = int(_ceil(wl.g_out, max(df.cmb.tile("G"), df.agg.tile("F"))))
+        else:
+            n_v = int(_ceil(wl.v, max(df.cmb.tile("V"), df.agg.tile("N"))))
+            n_f = int(_ceil(wl.g_out, max(df.cmb.tile("G"), df.agg.tile("F"))))
+            n_chunks = n_v * n_f
+        n_chunks = max(n_chunks, 1)
+        first = np.full(n_chunks, cmb_total / n_chunks)
+        second = np.full(n_chunks, agg_total / n_chunks)
+        return first, second
+
+    # ---- AC: exact row/element/column band accounting ---------------------
+    t_v_a, t_n, t_f_a = df.agg.tile("V"), df.agg.tile("N"), df.agg.tile("F")
+    t_v_c, t_g, t_f_c = df.cmb.tile("V"), df.cmb.tile("G"), df.cmb.tile("F")
+    tile_max = _tiles_of(wl.nnz, t_v_a)
+    ntrips = np.maximum(1, -(-tile_max // t_n)).astype(np.float64)
+    g_trips = float(_ceil(wl.g_out, t_g))
+
+    if gran == Granularity.ROW:
+        rows = max(t_v_a, t_v_c)
+        vtiles_per_chunk = max(1, rows // t_v_a)
+        n_chunks = int(_ceil(len(ntrips), vtiles_per_chunk))
+        pad = n_chunks * vtiles_per_chunk - len(ntrips)
+        nt = np.pad(ntrips, (0, pad))
+        band = nt.reshape(n_chunks, vtiles_per_chunk).sum(axis=1)
+        f_trips_a = float(_ceil(feat, t_f_a))
+        a = band * f_trips_a
+        c = np.full(
+            n_chunks,
+            _ceil(rows, t_v_c) * g_trips * _ceil(wl.f_in, t_f_c),
+        )
+        return a, c
+
+    if gran == Granularity.COLUMN:
+        cols = max(t_f_a, t_f_c)
+        n_chunks = int(_ceil(feat, cols))
+        a = np.full(n_chunks, float(ntrips.sum()) * _ceil(cols, t_f_a))
+        c = np.full(
+            n_chunks,
+            _ceil(wl.v, t_v_c) * g_trips * _ceil(cols, t_f_c),
+        )
+        return a, c
+
+    # ELEMENT: grid of (row band x column band) chunks, row-major.
+    rows = max(t_v_a, t_v_c)
+    cols = max(t_f_a, t_f_c)
+    vtiles_per_chunk = max(1, rows // t_v_a)
+    n_vchunks = int(_ceil(len(ntrips), vtiles_per_chunk))
+    pad = n_vchunks * vtiles_per_chunk - len(ntrips)
+    nt = np.pad(ntrips, (0, pad))
+    band = nt.reshape(n_vchunks, vtiles_per_chunk).sum(axis=1)
+    n_fchunks = int(_ceil(feat, cols))
+    a = np.repeat(band, n_fchunks) * _ceil(cols, t_f_a)
+    c_per = _ceil(rows, t_v_c) * g_trips * _ceil(cols, t_f_c)
+    c = np.full(n_vchunks * n_fchunks, float(c_per))
+    return a, c
+
+
+def simulate(
+    df: GNNDataflow,
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+) -> RunStats:
+    """Simulate one GNN layer under a complete dataflow description."""
+    df.validate()
+    if df.inter == InterPhase.PP:
+        pe_first = max(1, int(round(hw.n_pes * df.pe_split)))
+        pe_second = max(1, hw.n_pes - pe_first)
+        if df.order == PhaseOrder.AC:
+            pe_agg, pe_cmb = pe_first, pe_second
+        else:
+            pe_agg, pe_cmb = pe_second, pe_first
+    else:
+        pe_agg = pe_cmb = hw.n_pes
+
+    agg, cmb, first_c, second_c, first_t, second_t = _phase_costs(
+        df, wl, hw, pe_agg, pe_cmb
+    )
+    feat = wl.f_in if df.order == PhaseOrder.AC else wl.g_out
+    int_elems = float(wl.v * feat)
+    bytes_per = hw.bytes_per_elem
+    sp_opt = df.inter == InterPhase.SP and df.is_sp_optimized
+
+    # ---- intermediate traffic billing -------------------------------------
+    # Seq / SP-Generic: intermediate goes through the Global Buffer (and
+    # consumes its bandwidth).  PP: dedicated ping-pong buffer + NoC — GB
+    # bandwidth is NOT consumed, energy scales with the (small) buffer.
+    # SP-Optimized: intermediate never leaves the PEs.
+    int_energy_per_access = hw.gb_energy_pj
+    buffering = table3_buffering(df, wl)
+    int_uses_gb_bw = df.inter in (InterPhase.SEQ, InterPhase.SP)
+    if sp_opt:
+        first_t.pop("int_wr", None)
+        second_t.pop("int_rd", None)
+        int_energy_per_access = 0.0
+        int_uses_gb_bw = False
+    elif df.inter == InterPhase.PP:
+        int_energy_per_access = hw.buffer_access_energy(int(buffering * bytes_per))
+    elif df.inter == InterPhase.SEQ and hw.gb_capacity_bytes is not None:
+        if int_elems * bytes_per > hw.gb_capacity_bytes:
+            int_energy_per_access = hw.dram_energy_pj
+
+    # ---- runtime -----------------------------------------------------------
+    def gb_traffic(t: dict[str, float]) -> float:
+        tot = 0.0
+        for k, v_ in t.items():
+            if k.startswith("int") and not int_uses_gb_bw:
+                continue
+            tot += v_
+        return tot
+
+    bw = float(hw.gb_bandwidth)
+    # operand traffic (excluding the intermediate) overlaps with compute and
+    # shows up as a bandwidth stall; the intermediate hand-off is serialized
+    # at the phase boundary for Seq/SP-Generic — this is exactly Table 3's
+    # `t_load` that SP-Optimized saves.
+    int_wr = first_t.get("int_wr", 0.0) if int_uses_gb_bw else 0.0
+    int_rd = second_t.get("int_rd", 0.0) if int_uses_gb_bw else 0.0
+    traf_1 = gb_traffic(first_t) - int_wr
+    traf_2 = gb_traffic(second_t) - int_rd
+    stall_1 = max(1.0, traf_1 / max(bw * first_c.cycles, 1e-9))
+    stall_2 = max(1.0, traf_2 / max(bw * second_c.cycles, 1e-9))
+
+    if df.inter == InterPhase.SEQ or (df.inter == InterPhase.SP and not sp_opt):
+        t_xfer = (int_wr + int_rd) / bw
+        cycles = stall_1 * first_c.cycles + stall_2 * second_c.cycles + t_xfer
+        stall = cycles / max(first_c.cycles + second_c.cycles, 1e-9)
+    elif sp_opt:
+        # the fused dataflow never moves the intermediate at all
+        cycles = stall_1 * first_c.cycles + stall_2 * second_c.cycles
+        stall = cycles / max(first_c.cycles + second_c.cycles, 1e-9)
+    else:  # PP
+        a_ck, b_ck = _pp_chunk_times(
+            df, wl, hw, pe_agg, pe_cmb, first_c.cycles, second_c.cycles
+        )
+        n = len(a_ck)
+        if n == 1:
+            nostall = float(a_ck[0] + b_ck[0])
+        else:
+            overlap = np.maximum(a_ck[1:], b_ck[:-1]).sum()
+            nostall = float(a_ck[0] + overlap + b_ck[-1])
+        # Both phases pull operands from the GB *concurrently* during the
+        # overlapped window, so their instantaneous demands add — this is
+        # why PP suffers most when bandwidth shrinks (paper Fig. 13).
+        d1 = traf_1 / max(float(a_ck.sum()), 1e-9)
+        d2 = traf_2 / max(float(b_ck.sum()), 1e-9)
+        stall = max(1.0, (d1 + d2) / bw)
+        cycles = nostall * stall
+
+    # ---- energy ------------------------------------------------------------
+    breakdown: dict[str, float] = {}
+    gb_acc: dict[str, float] = {}
+    for t in (first_t, second_t):
+        for k, v_ in t.items():
+            if k.startswith("int"):
+                e, label = int_energy_per_access, "int"
+            elif k.startswith("psum"):
+                e, label = hw.gb_energy_pj, "psum"
+            else:
+                e, label = hw.gb_energy_pj, k
+            breakdown[f"gb_{label}"] = breakdown.get(f"gb_{label}", 0.0) + v_ * e
+            gb_acc[label] = gb_acc.get(label, 0.0) + v_
+    rf_total = agg.rf_accesses + cmb.rf_accesses
+    breakdown["rf"] = rf_total * hw.rf_energy_pj
+    energy = sum(breakdown.values())
+
+    macs = agg.macs + cmb.macs
+    util = macs / max(cycles * hw.n_pes, 1e-9)
+    return RunStats(
+        dataflow=str(df),
+        cycles=float(cycles),
+        energy_pj=float(energy),
+        energy_breakdown=breakdown,
+        gb_accesses=gb_acc,
+        rf_accesses=float(rf_total),
+        buffering_elems=float(buffering),
+        macs=float(macs),
+        pe_utilization=float(min(util, 1.0)),
+        stall_factor=float(stall),
+        agg_cycles=float(agg.cycles),
+        cmb_cycles=float(cmb.cycles),
+    )
+
+
+def simulate_model(
+    dataflows: list[GNNDataflow],
+    workloads: list[GNNLayerWorkload],
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+) -> list[RunStats]:
+    """Simulate a multi-layer GNN: one dataflow per layer (or one reused)."""
+    if len(dataflows) == 1:
+        dataflows = dataflows * len(workloads)
+    if len(dataflows) != len(workloads):
+        raise ValueError("need one dataflow (shared) or one per layer")
+    return [simulate(d, w, hw) for d, w in zip(dataflows, workloads)]

@@ -1,0 +1,12 @@
+from .layers import (
+    EllAdjacency,
+    LAYER_FNS,
+    POLICIES,
+    aggregate_full,
+    gcn_layer,
+    gin_layer,
+    init_layer,
+    multiphase_matmul,
+    sage_layer,
+)
+from .model import GNNConfig, gnn_forward, gnn_loss, init_gnn, make_node_classification_task

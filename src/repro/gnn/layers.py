@@ -1,0 +1,219 @@
+"""GNN layers in JAX with explicit multiphase execution policies.
+
+Each layer is a two-phase sparse/dense chain (aggregation = SpMM over the
+padded-ELL adjacency, combination = GEMM).  The ``policy`` argument selects
+the paper's inter-phase dataflow as a *program structure*:
+
+  * ``seq``        — materialize the full V x F intermediate, then GEMM
+                     (paper Seq: intermediate round-trips through memory).
+  * ``sp_generic`` — `lax.scan` over row bands; each band's intermediate is
+                     produced and consumed inside one scan step (paper
+                     SP-Generic at row granularity).
+  * ``sp_opt``     — the fused band step keeps the aggregated tile as the
+                     immediate GEMM operand (no stacked intermediate at
+                     all); on TPU this is the fused Pallas kernel
+                     (:mod:`repro.kernels.fused_agg_cmb`), on CPU its jnp
+                     body (paper SP-Optimized).
+  * ``pp``         — producer/consumer device groups connected by
+                     collective_permute (:mod:`repro.gnn.pp`), the paper's
+                     Parallel Pipeline at the device level.
+
+All policies compute the same numbers (tested to 1e-5); they differ in
+where the intermediate lives — exactly the paper's point.
+
+Phase order is a knob too: ``AC`` computes (A·X)·W, ``CA`` computes
+A·(X·W) — same result, different cost (paper Sec. 3.3; AWB-GCN is CA).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+
+POLICIES = ("seq", "sp_generic", "sp_opt", "pp")
+
+
+@dataclass(frozen=True)
+class EllAdjacency:
+    """Device-side padded-ELL adjacency (see CSRGraph.to_ell)."""
+
+    indices: jax.Array  # (V_pad, D) int32
+    weights: jax.Array  # (V_pad, D) f32 — zero on padded slots
+    n_nodes: int
+
+    @classmethod
+    def from_csr(cls, g: CSRGraph, block_rows: int = 1) -> "EllAdjacency":
+        idx, wts, _ = g.to_ell(block_rows)
+        return cls(jnp.asarray(idx), jnp.asarray(wts), g.n_nodes)
+
+    @property
+    def v_pad(self) -> int:
+        return self.indices.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Aggregation (SpMM) primitives
+# ---------------------------------------------------------------------------
+
+
+def aggregate_full(adj: EllAdjacency, x: jax.Array) -> jax.Array:
+    """Whole-graph aggregation: out[v] = sum_d w[v,d] * x[idx[v,d]]."""
+    gathered = x[adj.indices]  # (V_pad, D, F)
+    return jnp.einsum("vd,vdf->vf", adj.weights, gathered)
+
+
+def aggregate_band(indices: jax.Array, weights: jax.Array, x: jax.Array) -> jax.Array:
+    """Aggregation for one row band: indices/weights (B, D)."""
+    gathered = x[indices]  # (B, D, F)
+    return jnp.einsum("bd,bdf->bf", weights, gathered)
+
+
+def _band_scan(
+    adj: EllAdjacency,
+    x: jax.Array,
+    band_fn: Callable[[jax.Array], jax.Array],
+    band_size: int,
+):
+    v_pad = adj.v_pad
+    n_bands = -(-v_pad // band_size)
+    pad = n_bands * band_size - v_pad
+    idx = jnp.pad(adj.indices, ((0, pad), (0, 0)))
+    wts = jnp.pad(adj.weights, ((0, pad), (0, 0)))
+    idx = idx.reshape(n_bands, band_size, -1)
+    wts = wts.reshape(n_bands, band_size, -1)
+
+    def step(carry, band):
+        i, w = band
+        h_band = aggregate_band(i, w, x)
+        return carry, band_fn(h_band)
+
+    _, out = jax.lax.scan(step, None, (idx, wts))
+    out = out.reshape(n_bands * band_size, -1)
+    return out[:v_pad]
+
+
+# ---------------------------------------------------------------------------
+# Two-phase execution under a multiphase policy
+# ---------------------------------------------------------------------------
+
+
+def multiphase_matmul(
+    adj: EllAdjacency,
+    x: jax.Array,
+    w: jax.Array,
+    policy: str = "sp_opt",
+    order: str = "AC",
+    band_size: int = 128,
+    use_pallas: bool = False,
+    mesh=None,
+) -> jax.Array:
+    """Execute aggregation + combination under an inter-phase policy.
+
+    AC: (A @ X) @ W.  CA: A @ (X @ W).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+    if order not in ("AC", "CA"):
+        raise ValueError(f"order must be AC or CA, got {order!r}")
+
+    if policy == "pp":
+        from .pp import pp_multiphase_matmul
+
+        return pp_multiphase_matmul(adj, x, w, order=order, mesh=mesh)
+
+    if order == "CA":
+        xw = x @ w  # combination first (dense GEMM)
+        if policy == "seq":
+            return aggregate_full(adj, xw)[: adj.n_nodes]
+        # SP: aggregate the combined features band by band
+        return _band_scan(adj, xw, lambda h: h, band_size)[: adj.n_nodes]
+
+    # ---- AC order ----------------------------------------------------------
+    if policy == "seq":
+        h = aggregate_full(adj, x)  # intermediate fully materialized
+        return (h @ w)[: adj.n_nodes]
+    if policy == "sp_generic":
+        return _band_scan(adj, x, lambda h: h @ w, band_size)[: adj.n_nodes]
+    # sp_opt: fused aggregation+combination tile kernel
+    if use_pallas:
+        from ..kernels.fused_agg_cmb.ops import fused_agg_cmb
+
+        return fused_agg_cmb(adj.indices, adj.weights, x, w, band_size=band_size)[
+            : adj.n_nodes
+        ]
+    return _band_scan(adj, x, lambda h: h @ w, band_size)[: adj.n_nodes]
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def gcn_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
+    """GCN: relu(Ã X W + b) with the multiphase policy."""
+    out = multiphase_matmul(adj, x, params["w"], policy=policy, order=order, **kw)
+    return jax.nn.relu(out + params["b"])
+
+
+def sage_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
+    """GraphSAGE with the paper's Sec.-6 decomposition:
+
+        concat(X, A·X) @ W  ==  X @ W_top + (A·X) @ W_bottom
+
+    The GEMM-first form keeps X @ W_top independent of aggregation — the
+    extra scheduling freedom the paper highlights.
+    """
+    self_term = x[: adj.n_nodes] @ params["w_top"]
+    agg_term = multiphase_matmul(
+        adj, x, params["w_bottom"], policy=policy, order=order, **kw
+    )
+    return jax.nn.relu(self_term + agg_term + params["b"])
+
+
+def gin_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
+    """GIN: MLP((1 + eps) * x + sum-aggregate(x)).
+
+    The sum aggregation is the same SpMM with unit weights; the first MLP
+    matmul plays the combination role, so the multiphase policy applies.
+    """
+    eps = params["eps"]
+    # aggregate-then-combine on the summed representation
+    unit_adj = EllAdjacency(adj.indices, (adj.weights > 0).astype(x.dtype), adj.n_nodes)
+    agg = multiphase_matmul(unit_adj, x, params["w1"], policy=policy, order=order, **kw)
+    self_term = (1.0 + eps) * x[: adj.n_nodes] @ params["w1"]
+    h = jax.nn.relu(agg + self_term + params["b1"])
+    return jax.nn.relu(h @ params["w2"] + params["b2"])
+
+
+LAYER_FNS = {"gcn": gcn_layer, "sage": sage_layer, "gin": gin_layer}
+
+
+def init_layer(kind: str, rng: jax.Array, f_in: int, f_out: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale = 1.0 / np.sqrt(f_in)
+    if kind == "gcn":
+        return {
+            "w": jax.random.normal(k1, (f_in, f_out)) * scale,
+            "b": jnp.zeros((f_out,)),
+        }
+    if kind == "sage":
+        return {
+            "w_top": jax.random.normal(k1, (f_in, f_out)) * scale,
+            "w_bottom": jax.random.normal(k2, (f_in, f_out)) * scale,
+            "b": jnp.zeros((f_out,)),
+        }
+    if kind == "gin":
+        return {
+            "eps": jnp.zeros(()),
+            "w1": jax.random.normal(k1, (f_in, f_out)) * scale,
+            "b1": jnp.zeros((f_out,)),
+            "w2": jax.random.normal(k2, (f_out, f_out)) * (1.0 / np.sqrt(f_out)),
+            "b2": jnp.zeros((f_out,)),
+        }
+    raise KeyError(kind)

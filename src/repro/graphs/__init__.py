@@ -1,0 +1,2 @@
+from .csr import CSRGraph, from_edges, block_diagonal
+from .datasets import TABLE4, DatasetSpec, load_dataset, all_datasets

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the performance-critical phases.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper, interpret=True off-TPU), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,15 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; on CPU hosts we validate with the
+    interpreter (assignment: interpret=True executes the kernel body in
+    Python for correctness)."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

@@ -1,0 +1,99 @@
+"""Flash attention forward kernel — SP-Optimized applied to attention.
+
+Attention is a multiphase GEMM-GEMM chain (QKᵀ -> softmax -> PV).  In the
+paper's taxonomy the naive implementation is Seq (the S x S score matrix
+round-trips through memory); flash attention is exactly the SP-Optimized
+inter-phase dataflow: the score tile is produced, normalized online and
+consumed by the PV matmul while still in VMEM/registers — element
+granularity pipelining with matched tile sizes between the phases.
+
+Grid: (batch*heads, q blocks).  The KV sequence is walked temporally
+inside the kernel with the classic running-max/denominator recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,  # (1, bq, D)
+    k_ref,  # (1, Sk, D)
+    v_ref,  # (1, Sk, D)
+    o_ref,  # (1, bq, D)
+    *,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+    seq_k: int,
+):
+    bq, d = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * sm_scale
+    q_pos = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+
+    n_kb = pl.cdiv(seq_k, block_k)
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = k_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_blk.T  # (bq, bk) — phase 1 tile, never leaves VMEM
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = k_pos[None, :] < seq_k
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v_blk  # phase 2 consumes in place
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BH, Sk, D) — padded to a block_k multiple
+    v: jax.Array,  # (BH, Sk, D)
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    sm_scale: float | None = None,
+    causal: bool = False,
+    seq_k_real: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    grid = (bh, pl.cdiv(sq, bq))
+    kernel = functools.partial(
+        _kernel, block_k=bk, sm_scale=sm_scale, causal=causal,
+        seq_k=seq_k_real if seq_k_real is not None else sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, sk, d), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Jitted wrapper for the flash attention kernel (with GQA support)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, default_interpret
+from .kernel import flash_attention_kernel as _raw
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal=False, block_q=128, block_k=128):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D) with Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hq, sk, d)
+    vf = v.reshape(b * hq, sk, d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sqp = cdiv(sq, bq) * bq
+    skp = cdiv(sk, bk) * bk
+    qf = jnp.pad(qf, ((0, 0), (0, sqp - sq), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, skp - sk), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, skp - sk), (0, 0)))
+    out = _raw(
+        qf, kf, vf,
+        block_q=bq, block_k=bk,
+        causal=causal, seq_k_real=sk, interpret=default_interpret(),
+    )
+    return out[:, :sq].reshape(b, hq, sq, d)

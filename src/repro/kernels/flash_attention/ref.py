@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: materialized-scores attention (the paper's Seq)."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, sm_scale=None, causal=False):
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * sm_scale
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(sk)[None, :]
+        s = jnp.where(kp <= qp, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+import jax  # noqa: E402  (used by jax.nn above)

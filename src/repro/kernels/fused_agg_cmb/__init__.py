@@ -1,0 +1,3 @@
+from .kernel import fused_agg_cmb_kernel
+from .ops import fused_agg_cmb
+from .ref import fused_ref

@@ -1,0 +1,75 @@
+"""SP-Optimized fused aggregation+combination kernel.
+
+The paper's SP-Optimized inter-phase dataflow (Sec. 4.2, Table 2 row 2):
+the aggregated tile is kept *in the PEs* and consumed directly by the
+combination phase — ``SP_AC({V_x F_x} N_t, {V_x F_x} G_t)`` with
+T_V/T_F shared between phases and temporal reduction (T_N = 1).
+
+TPU translation: one ``pallas_call`` whose grid walks row blocks (T_V).
+Each step (a) gathers + accumulates the neighbor rows into a VMEM register
+tile h (the aggregation), then (b) immediately feeds h into the MXU matmul
+with the weight block (the combination).  The V x F intermediate never
+exists in HBM — that is the entire point of SP-Optimized, and it is the
+same trick flash-attention plays on the attention GEMM-GEMM chain.
+
+The feature dimension is walked in ``block_f`` chunks with a float32 VMEM
+accumulator for the output — the paper's partial-sum overhead appears here
+as the accumulator revisits (kept on-chip because T_G = G fits VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, wts_ref, x_ref, w_ref, o_ref, *, ell_width: int):
+    """out[b, :] = (sum_d wts[b,d] * x[idx[b,d], :]) @ w — fused."""
+
+    def agg_body(d, acc):
+        rows = idx_ref[:, d]
+        gathered = x_ref[rows, :]  # (B, F)
+        return acc + wts_ref[:, d][:, None] * gathered
+
+    b = idx_ref.shape[0]
+    f = x_ref.shape[1]
+    h = jax.lax.fori_loop(
+        0, ell_width, agg_body, jnp.zeros((b, f), jnp.float32)
+    )  # the intermediate tile — lives only in VMEM
+    o_ref[...] = jnp.dot(
+        h, w_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def fused_agg_cmb_kernel(
+    indices: jax.Array,  # (V_pad, D)
+    weights: jax.Array,  # (V_pad, D)
+    x: jax.Array,  # (V, F)
+    w: jax.Array,  # (F, G)
+    *,
+    block_v: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused (A @ X) @ W with the intermediate pinned in VMEM."""
+    v_pad, d = indices.shape
+    v, f = x.shape
+    f2, g = w.shape
+    assert f == f2
+    bv = min(block_v, v_pad)
+    grid = (pl.cdiv(v_pad, bv),)
+    kernel = functools.partial(_kernel, ell_width=d)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((v_pad, g), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, d), lambda i: (i, 0)),
+            pl.BlockSpec((bv, d), lambda i: (i, 0)),
+            pl.BlockSpec((v, f), lambda i: (0, 0)),  # vertex table resident
+            pl.BlockSpec((f, g), lambda i: (0, 0)),  # weights resident
+        ],
+        out_specs=pl.BlockSpec((bv, g), lambda i: (i, 0)),
+        interpret=interpret,
+    )(indices, weights, x, w)

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the fused SP-Optimized kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, default_interpret
+from .kernel import fused_agg_cmb_kernel as _raw
+
+
+@functools.partial(jax.jit, static_argnames=("band_size",))
+def fused_agg_cmb(indices, weights, x, w, band_size=128):
+    v_pad, d = indices.shape
+    bv = min(band_size, v_pad)
+    vp = cdiv(v_pad, bv) * bv
+    idx = jnp.pad(indices, ((0, vp - v_pad), (0, 0)))
+    wts = jnp.pad(weights, ((0, vp - v_pad), (0, 0)))
+    out = _raw(idx, wts, x, w, block_v=bv, interpret=default_interpret())
+    return out[:v_pad]

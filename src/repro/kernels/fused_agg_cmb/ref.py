@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused SP-Optimized aggregation+combination."""
+import jax.numpy as jnp
+
+
+def fused_ref(indices, weights, x, w):
+    gathered = x[indices]  # (V_pad, D, F)
+    h = jnp.einsum("vd,vdf->vf", weights.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    return jnp.dot(h, w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)

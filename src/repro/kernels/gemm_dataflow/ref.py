@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the dataflow-configurable GEMM."""
+import jax.numpy as jnp
+
+
+def gemm_ref(x, w):
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)

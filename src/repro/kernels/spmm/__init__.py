@@ -1,0 +1,3 @@
+from .kernel import spmm_ell
+from .ops import spmm
+from .ref import spmm_ref

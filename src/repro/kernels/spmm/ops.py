@@ -1,0 +1,23 @@
+"""Jitted wrapper for the ELL SpMM aggregation kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, default_interpret
+from .kernel import spmm_ell as _raw
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "block_f"))
+def spmm(indices, weights, x, block_v=128, block_f=128):
+    v_pad, d = indices.shape
+    v, f = x.shape
+    bv, bf = min(block_v, v_pad), min(block_f, f)
+    vp = cdiv(v_pad, bv) * bv
+    fp = cdiv(f, bf) * bf
+    idx = jnp.pad(indices, ((0, vp - v_pad), (0, 0)))
+    wts = jnp.pad(weights, ((0, vp - v_pad), (0, 0)))
+    xp = jnp.pad(x, ((0, 0), (0, fp - f)))
+    out = _raw(idx, wts, xp, block_v=bv, block_f=bf,
+               interpret=default_interpret())
+    return out[:v_pad, :f]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for ELL SpMM."""
+import jax.numpy as jnp
+
+
+def spmm_ref(indices, weights, x):
+    gathered = x[indices]  # (V_pad, D, F)
+    return jnp.einsum("vd,vdf->vf", weights.astype(jnp.float32),
+                      gathered.astype(jnp.float32)).astype(x.dtype)

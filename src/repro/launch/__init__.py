@@ -1,0 +1,1 @@
+from .mesh import make_mesh_for, make_production_mesh

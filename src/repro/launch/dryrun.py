@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the dry-run (and only the
+dry-run) needs 512 placeholder CPU devices for the 16x16 and 2x16x16
+meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every applicable cell
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory analysis, cost analysis, collective bytes, and the three roofline
+terms (assignment §Roofline).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, SHAPES, applicable, get_config
+from ..models import forward, lm_loss, decode_step, param_shardings, production_rules, use_sharding
+from ..models.sharding import tuned_rules
+from ..optim import adamw
+from ..optim.schedule import warmup_cosine
+from .hlo import collective_bytes_scaled, while_trip_counts
+from .mesh import make_production_mesh
+from .roofline import roofline_report
+from .specs import (
+    abstract_opt_state,
+    abstract_params,
+    batch_shardings,
+    batch_specs,
+    cache_shardings,
+    decode_specs,
+    opt_shardings,
+)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def grad_accum_steps(cfg, shape, mesh, rules=None) -> int:
+    """Microbatching so per-device live activations stay within ~6 GB.
+
+    Standard production practice: the global batch is split into
+    microbatches scanned inside the step, gradients accumulated — trades
+    one more traversal of the weights for a bounded activation footprint.
+    With sequence parallelism the saved residuals are seq-sharded over the
+    model axis, so far fewer microbatches are needed (each microbatch
+    re-gathers the weights — §Perf iteration L2).
+    """
+    dp = mesh.devices.size // 16  # model axis is 16 on both meshes
+    tok_dev = shape.global_batch * shape.seq_len / max(dp, 1)
+    act_bytes = tok_dev * cfg.d_model * cfg.n_layers * 2 * 2  # carries, bf16
+    if rules is not None and rules.sequence:
+        act_bytes /= mesh.shape[rules.sequence]
+    # the f32 logits + log-softmax of one microbatch are often the peak
+    vocab_dev = cfg.vocab / (16 if cfg.vocab % 16 == 0 else 1)
+    logit_bytes = tok_dev * vocab_dev * 6  # f32 logits + softmax temps
+    accum = 1
+    # microbatches must still cover the data axis (>= 1 sequence/device)
+    max_accum = max(shape.global_batch // dp, 1)
+    # 1.5 GB live-activation target: gathered f32 buffers (2-4 alive
+    # during remat-backward) plus carries must stay well under HBM
+    while max(act_bytes, logit_bytes) / accum > 1.5e9 and accum < max_accum:
+        accum *= 2
+    return accum
+
+
+def accumulated_grads(cfg, params, batch, accum: int):
+    """Mean loss + grads over `accum` microbatches via lax.scan."""
+    if accum <= 1:
+        return jax.value_and_grad(lambda p: lm_loss(cfg, p, batch))(params)
+
+    def split(x):
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+    zero_grads = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+    def step(carry, mb):
+        loss_sum, gacc = carry
+        l, g = jax.value_and_grad(lambda p: lm_loss(cfg, p, mb))(params)
+        gacc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), gacc, g
+        )
+        return (loss_sum + l, gacc), None
+
+    (loss, grads), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), zero_grads), micro
+    )
+    grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+    return loss / accum, grads
+
+
+def build_step(cfg, shape, mesh, rules):
+    """Returns (fn, arg_structs, in_shardings, donate) for the cell."""
+    params_abs = abstract_params(cfg)
+    pshard = param_shardings(params_abs, mesh, rules)
+
+    if shape.kind == "train":
+        opt_abs = abstract_opt_state(cfg, params_abs)
+        oshard = opt_shardings(cfg, params_abs, opt_abs, mesh, rules)
+        bshard = batch_shardings(cfg, shape, mesh, rules)
+        init_opt, update = adamw(lr=warmup_cosine(3e-4, 100, 10_000))
+        accum = grad_accum_steps(cfg, shape, mesh, rules)
+
+        def train_step(params, opt, batch):
+            loss, grads = accumulated_grads(cfg, params, batch, accum)
+            params, opt = update(grads, opt, params)
+            return loss, params, opt
+
+        args = (params_abs, opt_abs, batch_specs(cfg, shape))
+        shardings = (pshard, oshard, bshard)
+        return train_step, args, shardings, (0, 1)
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            logits, _ = forward(cfg, params, batch["inputs"])
+            return logits
+
+        args = (params_abs, batch_specs(cfg, shape))
+        shardings = (pshard, batch_shardings(cfg, shape, mesh, rules))
+        return prefill_step, args, shardings, ()
+
+    # decode
+    specs = decode_specs(cfg, shape)
+    cshard = cache_shardings(cfg, specs["cache"], mesh, rules)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    # batch=1 shapes (long_500k) cannot shard over the data axes
+    dp_axes = rules.batch if isinstance(rules.batch, tuple) else (rules.batch,)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    dp = rules.batch if shape.global_batch % dp_size == 0 else None
+    tok_spec = (
+        NamedSharding(mesh, P(dp, None, None))
+        if cfg.embedded_inputs
+        else NamedSharding(mesh, P(dp, None))
+    )
+
+    def serve_step(params, cache, tokens, index):
+        return decode_step(cfg, params, cache, tokens, index)
+
+    args = (params_abs, specs["cache"], specs["tokens"], specs["index"])
+    shardings = (pshard, cshard, tok_spec, NamedSharding(mesh, P()))
+    return serve_step, args, shardings, (1,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, save: bool = True,
+             tuned: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = tuned_rules(arch, multi_pod) if tuned else production_rules(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    with use_sharding(mesh, rules):
+        fn, args, shardings, donate = build_step(cfg, shape, mesh, rules)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                fn, in_shardings=shardings, donate_argnums=donate or None
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_scaled(hlo)  # execution-count weighted
+    trips = while_trip_counts(hlo)
+
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + ("-tuned" if tuned else "")
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_per_device": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": {
+            "bytes_by_op": coll.bytes_by_op,
+            "link_bytes_by_op": coll.link_bytes_by_op,
+            "count_by_op": coll.count_by_op,
+            "total_bytes_per_device": coll.total_bytes,
+            "link_bytes_per_device": coll.total_link_bytes,
+        },
+        "while_trip_counts": trips,
+    }
+    result["roofline"] = roofline_report(cfg, shape, result)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        path = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+        path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tuned", action="store_true",
+                    help="hillclimbed sharding rules (§Perf) instead of baseline")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in ((False, True) if args.both_meshes else (args.multi_pod,)):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+        try:
+            r = run_cell(arch, shape, mp, tuned=args.tuned)
+            if r.get("skipped"):
+                print(f"SKIP {tag}: {r['reason']}", flush=True)
+                continue
+            rf = r["roofline"]
+            print(
+                f"OK   {tag}: compile={r['compile_s']}s "
+                f"flops/dev={r['cost']['flops_per_device']:.3e} "
+                f"coll={r['collectives']['total_bytes_per_device']:.3e}B "
+                f"bound={rf['dominant_term']}",
+                flush=True,
+            )
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,242 @@
+"""HLO-text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but not
+collective traffic, so we parse the (per-device) HLO module text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (assignment §Roofline).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# match " = <shape(s)> <opcode>(" with optional -start/-done suffixes
+_OP_RE = re.compile(
+    r"=\s+(?P<result>.*?)\s+(?P<op>"
+    + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\((?P<args>.*)$"
+)
+# replica_groups=[G,P]<=[N] — P participants per group
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[dims] shape literal in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int] = field(default_factory=dict)  # operand bytes
+    link_bytes_by_op: dict[str, int] = field(default_factory=dict)  # wire traffic
+    count_by_op: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_link_bytes(self) -> int:
+        return sum(self.link_bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-collective byte accounting over a (per-device) HLO module.
+
+    Post-optimization HLO prints operands without shapes, so sizes are
+    derived from the *result* shape plus the replica-group participant
+    count P (``replica_groups=[G,P]``):
+
+      operand bytes:  all-gather = result/P; reduce-scatter = result*P;
+                      all-reduce / all-to-all / permute = result.
+      link bytes (ring-algorithm wire traffic per device):
+                      all-gather & reduce-scatter = operand*(P-1);
+                      all-reduce = 2*operand*(P-1)/P;
+                      all-to-all = operand*(P-1)/P; permute = operand.
+
+    ``-done`` ops are skipped (the matching ``-start`` already counted).
+    Loop bodies are counted once — the dry-run scales by trip counts.
+    """
+    stats = CollectiveStats(defaultdict(int), defaultdict(int), defaultdict(int))
+    for line in hlo_text.splitlines():
+        if "-done(" in line or " = " not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        result = shape_bytes(m.group("result"))
+        gm = _GROUP_RE.search(line)
+        p = int(gm.group(2)) if gm else 1
+        if op == "all-gather":
+            operand = result // max(p, 1)
+            link = operand * (p - 1)
+        elif op == "reduce-scatter":
+            operand = result * p
+            link = result * (p - 1)
+        elif op == "all-reduce":
+            operand = result
+            link = int(2 * operand * (p - 1) / max(p, 1))
+        elif op == "all-to-all":
+            operand = result
+            link = int(operand * (p - 1) / max(p, 1))
+        else:  # collective-permute
+            operand = result
+            link = operand
+        stats.bytes_by_op[op] += operand
+        stats.link_bytes_by_op[op] += link
+        stats.count_by_op[op] += 1
+    stats.bytes_by_op = dict(stats.bytes_by_op)
+    stats.link_bytes_by_op = dict(stats.link_bytes_by_op)
+    stats.count_by_op = dict(stats.count_by_op)
+    return stats
+
+
+_WHILE_TRIP_RE = re.compile(
+    r"trip_count[\"']?\s*[:=]\s*[\{\"']*n?[\"']?\s*[:=]?\s*[\"']?(\d+)"
+)
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    """Trip counts of while loops (scanned layers) from backend_config
+    annotations, e.g. ``backend_config={"known_trip_count":{"n":"30"}}``."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "while(" not in line:
+            continue
+        m = _WHILE_TRIP_RE.search(line)
+        if m:
+            out.append(int(m.group(1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Execution-count-aware accounting (collectives inside scanned layers run
+# trip_count times per step; the gradient all-reduce runs once)
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Computation name -> instruction lines.  Header lines look like
+    ``%region_0.1_spmd (param: (...)) -> (...) {`` (ENTRY-prefixed for
+    main); instruction lines are indented."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_RE.match(stripped.removeprefix("ENTRY ").strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None and stripped and stripped != "}":
+            comps[cur].append(stripped)
+    return comps
+
+
+def execution_counts(hlo_text: str) -> dict[str, int]:
+    """Execution multiplier per computation: product of enclosing while
+    trip counts (nested scans multiply).  Computations not reached from a
+    while body have multiplier 1."""
+    comps = _split_computations(hlo_text)
+    # while ops: (parent_comp, body_comp, trips)
+    edges: list[tuple[str, str, int]] = []
+    for parent, lines in comps.items():
+        for line in lines:
+            if "while(" not in line:
+                continue
+            bm = _WHILE_BODY_RE.search(line)
+            tm = _WHILE_TRIP_RE.search(line)
+            trips = int(tm.group(1)) if tm else 1
+            if bm:
+                edges.append((parent, bm.group(1), trips))
+                cm = _WHILE_COND_RE.search(line)
+                if cm:
+                    edges.append((parent, cm.group(1), trips))
+    mult = {name: 1 for name in comps}
+    # propagate multipliers down the while-nesting DAG (few levels deep)
+    for _ in range(8):
+        changed = False
+        for parent, body, trips in edges:
+            want = mult.get(parent, 1) * trips
+            if mult.get(body, 1) < want:
+                mult[body] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes_scaled(hlo_text: str) -> CollectiveStats:
+    """Like :func:`collective_bytes` but weighting each collective by its
+    computation's execution count (scan trip products)."""
+    comps = _split_computations(hlo_text)
+    mult = execution_counts(hlo_text)
+    stats = CollectiveStats(defaultdict(int), defaultdict(int), defaultdict(int))
+    for comp, lines in comps.items():
+        m_c = mult.get(comp, 1)
+        for line in lines:
+            if "-done(" in line or " = " not in line:
+                continue
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            op = m.group("op")
+            result = shape_bytes(m.group("result"))
+            gm = _GROUP_RE.search(line)
+            p = int(gm.group(2)) if gm else 1
+            if op == "all-gather":
+                operand = result // max(p, 1)
+                link = operand * (p - 1)
+            elif op == "reduce-scatter":
+                operand = result * p
+                link = result * (p - 1)
+            elif op == "all-reduce":
+                operand = result
+                link = int(2 * operand * (p - 1) / max(p, 1))
+            elif op == "all-to-all":
+                operand = result
+                link = int(operand * (p - 1) / max(p, 1))
+            else:
+                operand = result
+                link = operand
+            stats.bytes_by_op[op] += operand * m_c
+            stats.link_bytes_by_op[op] += link * m_c
+            stats.count_by_op[op] += m_c
+    stats.bytes_by_op = dict(stats.bytes_by_op)
+    stats.link_bytes_by_op = dict(stats.link_bytes_by_op)
+    stats.count_by_op = dict(stats.count_by_op)
+    return stats

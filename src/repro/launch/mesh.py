@@ -1,0 +1,30 @@
+"""Production mesh construction (assignment spec).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to build the 16x16 (single-pod) and 2x16x16 (two-pod) meshes on
+CPU placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh_for(devices: int, model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Elastic helper: (data, model) mesh over an arbitrary device count
+    (used by the trainer and the elastic-restore tests)."""
+    assert devices % model_parallel == 0, (devices, model_parallel)
+    return jax.make_mesh(
+        (devices // model_parallel, model_parallel),
+        ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

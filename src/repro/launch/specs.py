@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no
+allocation) plus the in/out sharding assignments for each step kind."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import ShapeSuite
+from ..models import (
+    ShardingRules,
+    init_cache,
+    init_params,
+    param_shardings,
+)
+from ..models.config import ArchConfig
+from ..optim import adamw
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSuite) -> dict:
+    """Training/prefill batch as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embedded_inputs:
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out = {"inputs": inputs}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSuite) -> dict:
+    """Decode step inputs: one token + the full KV/state cache."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.embedded_inputs:
+        tokens = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"tokens": tokens, "cache": cache, "index": index}
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ArchConfig, params_abs):
+    init_opt, _ = adamw()
+    return jax.eval_shape(init_opt, params_abs)
+
+
+# ---------------------------------------------------------------------------
+# Sharding assignments
+# ---------------------------------------------------------------------------
+
+
+def _dp(rules: ShardingRules):
+    return rules.batch
+
+
+def batch_shardings(cfg, shape, mesh, rules: ShardingRules):
+    dp = _dp(rules)
+    if cfg.embedded_inputs:
+        inp = NamedSharding(mesh, P(dp, None, None))
+    else:
+        inp = NamedSharding(mesh, P(dp, None))
+    out = {"inputs": inp}
+    if shape.kind == "train":
+        out["labels"] = NamedSharding(mesh, P(dp, None))
+    return out
+
+
+def _zero1_spec(spec: P, shape: tuple, mesh, rules: ShardingRules) -> P:
+    """ZeRO-1: additionally shard optimizer-state leaves over the data
+    axes on the first dimension that is unsharded and divisible."""
+    dp = _dp(rules)
+    if dp is None:
+        return spec
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    specs = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, s) in enumerate(zip(shape, specs)):
+        if s is None and dim % dp_size == 0 and dim >= dp_size:
+            specs[i] = dp
+            return P(*specs)
+    return spec
+
+
+def opt_shardings(cfg, params_abs, opt_abs, mesh, rules: ShardingRules):
+    """Optimizer-state shardings: params' TP sharding + ZeRO-1 over DP."""
+    pshard = param_shardings(params_abs, mesh, rules)
+
+    def zero1(ns: NamedSharding, leaf):
+        return NamedSharding(mesh, _zero1_spec(ns.spec, leaf.shape, mesh, rules))
+
+    m_shard = jax.tree_util.tree_map(zero1, pshard, params_abs)
+    from ..optim import AdamWState
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=m_shard,
+        v=m_shard,
+    )
+
+
+def cache_shardings(cfg, cache_abs, mesh, rules: ShardingRules):
+    """KV/state cache shardings.
+
+    KV caches (stacked (L, B, S, H, D)): batch over the DP axes; the
+    sequence dim over the model axis (flash-decoding style partial
+    attention — kv heads may be fewer than the model-axis size, sequence
+    always divides it).  Recurrent states (B, ...): batch over DP only.
+    """
+    dp = _dp(rules)
+    model = rules.heads
+
+    def one(leaf):
+        shp = leaf.shape
+        dp_axes = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+        dp_size = 1
+        for a in dp_axes:
+            dp_size *= mesh.shape[a]
+        if len(shp) == 5:  # stacked KV: (L, B, S, H, D)
+            spec = [None] * 5
+            if dp and shp[1] % dp_size == 0:
+                spec[1] = dp
+            if model and shp[2] % mesh.shape[model] == 0 and shp[2] >= mesh.shape[model]:
+                spec[2] = model
+            return NamedSharding(mesh, P(*spec))
+        if len(shp) >= 2:  # stacked recurrent state: (L, B, ...)
+            spec = [None] * len(shp)
+            if dp and shp[1] % dp_size == 0:
+                spec[1] = dp
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, cache_abs)

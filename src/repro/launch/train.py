@@ -1,0 +1,158 @@
+"""Training launcher.
+
+CPU smoke / single host:
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
+        --steps 30 --batch 4 --seq 64 --checkpoint-dir /tmp/ckpt
+
+Production invocation (TPU pod; identical code path — the mesh grows):
+    python -m repro.launch.train --arch granite-8b --steps 100000 \
+        --batch 256 --seq 4096 --model-parallel 16 \
+        --checkpoint-dir gs://.../ckpt --grad-compression int8
+
+Features: deterministic resumable data stream, atomic checkpoints +
+auto-resume, retrying step runner with straggler monitor, optional
+int8 error-feedback gradient compression on the DP all-reduce, ZeRO-1
+sharded optimizer state (on multi-device meshes).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..configs import ARCH_IDS, get_config
+from ..data.pipeline import LMDataPipeline
+from ..models import (
+    init_params,
+    lm_loss,
+    param_shardings,
+    production_rules,
+    use_sharding,
+)
+from ..models.sharding import ShardingRules
+from ..optim import adamw, compress_grads, decompress_grads, init_error_feedback
+from ..optim.schedule import warmup_cosine
+from ..runtime.fault_tolerance import ResilientRunner, StragglerMonitor
+from .mesh import make_mesh_for
+
+log = logging.getLogger("repro.train")
+
+
+def build_trainer(cfg, mesh, rules, lr=3e-4, total_steps=10_000,
+                  grad_compression: str | None = None):
+    init_opt, update = adamw(lr=warmup_cosine(lr, min(100, total_steps // 10 + 1), total_steps))
+
+    def loss_fn(p, batch):
+        return lm_loss(cfg, p, batch)
+
+    def step_fn(params, opt, ef, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_compression == "int8":
+            q, ef = compress_grads(grads, ef)
+            grads = decompress_grads(q)
+        params, opt = update(grads, opt, params)
+        return loss, params, opt, ef
+
+    return init_opt, jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", help="smoke-scale config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--grad-compression", choices=["int8"], default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n_dev = len(jax.devices())
+    mesh = make_mesh_for(n_dev, args.model_parallel) if n_dev > 1 else None
+    rules = (
+        ShardingRules(batch=("data",), heads="model", d_ff="model",
+                      experts="model", vocab="model")
+        if mesh is not None
+        else None
+    )
+
+    data = LMDataPipeline(cfg, args.batch, args.seq, seed=args.seed)
+    ckpt = Checkpointer(args.checkpoint_dir) if args.checkpoint_dir else None
+
+    with use_sharding(mesh, rules):
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        if mesh is not None:
+            shardings = param_shardings(params, mesh, rules)
+            params = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), params, shardings
+            )
+        init_opt, step_fn = build_trainer(
+            cfg, mesh, rules, lr=args.lr, total_steps=args.steps,
+            grad_compression=args.grad_compression,
+        )
+        opt = init_opt(params)
+        ef = init_error_feedback(params) if args.grad_compression else None
+
+        start_step = 0
+        if ckpt and ckpt.latest_step() is not None:
+            state = ckpt.restore({"params": params, "opt": opt, "data": data.state_dict()})
+            params, opt = state["params"], state["opt"]
+            data.load_state_dict(state["data"])
+            start_step = data.step
+            log.info("resumed from step %d", start_step)
+
+        def run_step(state, batch):
+            params, opt, ef = state
+            loss, params, opt, ef = step_fn(params, opt, ef, batch)
+            return (params, opt, ef), {"loss": float(loss)}
+
+        def save(step, state):
+            if ckpt:
+                params, opt, ef = state
+                data.step = step
+                ckpt.save(step, {"params": params, "opt": opt, "data": data.state_dict()})
+
+        def restore():
+            state = ckpt.restore({"params": params, "opt": opt, "data": data.state_dict()})
+            data.load_state_dict(state["data"])
+            return data.step, (state["params"], state["opt"], ef)
+
+        runner = ResilientRunner(
+            step_fn=run_step,
+            save_fn=save,
+            restore_fn=restore if ckpt else (lambda: (_ for _ in ()).throw(RuntimeError("no ckpt"))),
+            checkpoint_every=args.checkpoint_every,
+            monitor=StragglerMonitor(),
+        )
+
+        t0 = time.time()
+        state, metrics = runner.run(
+            (params, opt, ef), lambda s: data.peek(s), start_step, args.steps - start_step
+        )
+        dt = time.time() - t0
+        losses = [m["loss"] for m in metrics]
+        if losses:
+            log.info(
+                "steps=%d first_loss=%.4f last_loss=%.4f wall=%.1fs (%.2f s/step)",
+                len(losses), losses[0], losses[-1], dt, dt / max(len(losses), 1),
+            )
+            print(f"FINAL loss={losses[-1]:.4f} first={losses[0]:.4f} steps={len(losses)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

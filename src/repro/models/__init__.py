@@ -1,0 +1,18 @@
+from .config import ArchConfig, MoEConfig
+from .transformer import (
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    prefill,
+)
+from .sharding import (
+    ShardingRules,
+    param_shardings,
+    production_rules,
+    shard,
+    use_sharding,
+)
+from .stubs import make_inputs, synthetic_embeddings, synthetic_tokens

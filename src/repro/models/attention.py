@@ -1,0 +1,284 @@
+"""Attention: the LM-scale instance of the paper's multiphase taxonomy.
+
+QKᵀ -> softmax -> PV is a dependent GEMM-GEMM chain.  ``attn_policy``
+selects the inter-phase dataflow:
+
+  * ``seq``    — materialize the (S x S) score matrix (paper Seq; only
+                 viable at smoke scale — at 32k prefill the intermediate is
+                 the whole point of not doing this).
+  * ``sp_opt`` — chunked online-softmax: score tiles are produced and
+                 consumed in registers/VMEM, never stored (paper
+                 SP-Optimized == flash attention).  On TPU the Pallas
+                 kernel (:mod:`repro.kernels.flash_attention`) implements
+                 the same schedule; the lax.scan form below is what the
+                 dry-run lowers.
+
+Supports GQA (n_kv_heads < n_heads, grouped einsums — no KV repetition),
+sliding-window (local) attention, and single-token decode against a
+(possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .layers import rope
+from .sharding import shard
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": (jax.random.normal(k1, (d, cfg.n_heads * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, cfg.n_kv_heads * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, cfg.n_kv_heads * hd)) * s).astype(dt),
+        "wo": (
+            jax.random.normal(k4, (cfg.n_heads * hd, d)) * (1.0 / np.sqrt(d))
+        ).astype(dt),
+    }
+
+
+def _tp_size() -> int:
+    from .sharding import current_mesh, current_rules
+
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None or rules.heads is None:
+        return 1
+    ax = rules.heads
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    return size
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+def head_alignment(cfg: ArchConfig, ts: int | None = None):
+    """TP head alignment: (kv_rep, g_new, aligned?).
+
+    When the tensor-parallel size does not divide the head counts, pad the
+    per-KV query groups and *replicate* KV heads so both head dims divide
+    the TP axis.  Replication preserves semantics exactly (each real query
+    head still attends its original KV head; padded query slots have zero
+    wq columns and zero wo rows, so they contribute nothing).  Applied
+    only when the FLOP overhead is <= 2x (tiny archs like smollm keep
+    attention unsharded instead — the MLP still gets TP).
+    """
+    ts = _tp_size() if ts is None else ts
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    if ts <= 1 or (hkv % ts == 0 and cfg.n_heads % ts == 0):
+        return 1, g, ts > 1
+    rep = _lcm(hkv, ts) // hkv
+    g_new = -(-g // rep)
+    overhead = (hkv * rep * g_new) / (hkv * g)
+    if overhead > 2.0:
+        return 1, g, False
+    return rep, g_new, True
+
+
+def aligned_kv_heads(cfg: ArchConfig, ts: int | None = None) -> int:
+    rep, _, _ = head_alignment(cfg, ts)
+    return cfg.n_kv_heads * rep
+
+
+def _align_weights(cfg: ArchConfig, p: dict):
+    """Runtime-padded projection weights for TP alignment (zero-cost when
+    already aligned)."""
+    rep, g_new, _ = head_alignment(cfg)
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    if rep == 1 and g_new == g:
+        return p["wq"], p["wk"], p["wv"], p["wo"]
+    d = p["wq"].shape[0]
+    gp = rep * g_new
+    wq = p["wq"].reshape(d, hkv, g, hd)
+    wq = jnp.pad(wq, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    wq = wq.reshape(d, hkv * rep, g_new, hd).reshape(d, -1)
+    wk = jnp.repeat(p["wk"].reshape(d, hkv, hd), rep, axis=1).reshape(d, -1)
+    wv = jnp.repeat(p["wv"].reshape(d, hkv, hd), rep, axis=1).reshape(d, -1)
+    wo = p["wo"].reshape(hkv, g, hd, d)
+    wo = jnp.pad(wo, ((0, 0), (0, gp - g), (0, 0), (0, 0)))
+    wo = wo.reshape(hkv * rep, g_new, hd, d).reshape(-1, d)
+    return wq, wk, wv, wo
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    rep, g_new, _ = head_alignment(cfg)
+    hkv = cfg.n_kv_heads * rep
+    hq = hkv * g_new
+    wq, wk, wv, _ = _align_weights(cfg, p)
+    q = shard((x @ wq).reshape(b, s, hq, hd), "batch", None, "heads", None)
+    k = shard((x @ wk).reshape(b, s, hkv, hd), "batch", None, "heads", None)
+    v = shard((x @ wv).reshape(b, s, hkv, hd), "batch", None, "heads", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, Hkv, G, D) for grouped-query einsums."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _attend_seq(q, k, v, q_pos, k_pos, window: int) -> jax.Array:
+    """Materialized-score attention (the Seq baseline)."""
+    qg = _group(q, k.shape[2]).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    scores = scores / np.sqrt(q.shape[-1])
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    b, s = q.shape[:2]
+    return out.reshape(b, s, -1, q.shape[-1]).astype(q.dtype)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, window: int, chunk: int) -> jax.Array:
+    """SP-Optimized: lax.scan over KV chunks with online softmax.
+
+    The (bq x chunk) score tile is phase-1 output and phase-2 input inside
+    one scan step — element-granularity pipelining with matched tiles.
+    """
+    b, sq, h, hd = q.shape
+    n_kv = k.shape[2]
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_pos = jnp.pad(k_pos, (0, pad), constant_values=np.iinfo(np.int32).max)
+    kc = k.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+
+    qg = _group(q, n_kv).astype(jnp.float32) / np.sqrt(hd)
+
+    def step(carry, xs):
+        acc, m_prev, l_prev = carry
+        k_blk, v_blk, kp = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_blk.astype(jnp.float32))
+        mask = kp[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= kp[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=-1)
+        upd = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+        acc = acc * alpha[..., None] + upd
+        return (acc, m_new, l_new), None
+
+    g = h // n_kv
+    acc0 = jnp.zeros((b, n_kv, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+) -> jax.Array:
+    """Full-sequence (training / prefill) attention."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    pos1 = positions[0] if positions.ndim > 1 else positions
+    if cfg.attn_policy == "seq":
+        out = _attend_seq(q, k, v, pos1, pos1, window)
+    else:
+        out = _attend_chunked(q, k, v, pos1, pos1, window, cfg.attn_chunk)
+    out = out.reshape(b, s, -1)
+    _, _, _, wo = _align_weights(cfg, p)
+    return shard(out @ wo, "batch", "sequence", None)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, Hkv, D) — ring buffer when windowed
+    v: jax.Array
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int, length: int, window: int = 0):
+        size = min(length, window) if window > 0 else length
+        hd = cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        # TP-aligned KV head count (replicated KV under tensor parallelism)
+        shape = (batch, size, aligned_kv_heads(cfg), hd)
+        return cls(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def decode_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    cache: KVCache,
+    cur_index: jax.Array,  # scalar int32: absolute position of this token
+    *,
+    window: int = 0,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode against the cache; returns (out, new_cache)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cur_index, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    size = cache.k.shape[1]
+    slot = cur_index % size if window > 0 else cur_index
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+
+    # absolute positions held by each cache slot
+    slots = jnp.arange(size, dtype=jnp.int32)
+    if window > 0:
+        # ring buffer: slot s holds the most recent position p with
+        # p % size == s and p <= cur_index
+        delta = (slot - slots) % size
+        k_pos = cur_index - delta
+    else:
+        k_pos = slots
+    valid = (k_pos <= cur_index) & (k_pos >= 0)
+    if window > 0:
+        valid &= k_pos > cur_index - window
+    k_pos = jnp.where(valid, k_pos, np.iinfo(np.int32).max)
+
+    qg = _group(q, k.shape[2]).astype(jnp.float32) / np.sqrt(cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = jnp.where(
+        (k_pos[None, :] <= cur_index)[None, None, None], s, NEG_INF
+    )
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pattn, v.astype(jnp.float32))
+    out = out.reshape(b, 1, -1).astype(x.dtype)
+    _, _, _, wo = _align_weights(cfg, p)
+    return shard(out @ wo, "batch", None, None), KVCache(k, v)

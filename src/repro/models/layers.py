@@ -1,0 +1,120 @@
+"""Shared LM layers: norms, rotary embeddings, gated MLPs, heads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .sharding import shard
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def nonparam_layernorm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(cfg: ArchConfig, x: jax.Array, scale: jax.Array | None) -> jax.Array:
+    if cfg.norm == "nonparam_ln":
+        return nonparam_layernorm(x)
+    return rmsnorm(x, scale)
+
+
+def init_norm_scale(cfg: ArchConfig) -> jax.Array | None:
+    if cfg.norm == "nonparam_ln":
+        return jnp.zeros((1,), _dtype(cfg))  # placeholder leaf (unused)
+    return jnp.zeros((cfg.d_model,), _dtype(cfg))
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / d))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(ff)
+    dt = _dtype(cfg)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, ff)) * s_in).astype(dt),
+        "w_up": (jax.random.normal(k2, (d, ff)) * s_in).astype(dt),
+        "w_down": (jax.random.normal(k3, (ff, d)) * s_out).astype(dt),
+    }
+
+
+def mlp(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = shard(x @ p["w_gate"], "batch", None, "d_ff")
+    u = shard(x @ p["w_up"], "batch", None, "d_ff")
+    h = act(g) * u
+    # sequence-parallel residual stream: reduce-scatter instead of
+    # all-reduce when rules.sequence is set (Megatron-SP)
+    return shard(h @ p["w_down"], "batch", "sequence", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(cfg: ArchConfig, rng: jax.Array) -> dict:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(rng)
+    out = {}
+    if not cfg.embedded_inputs:
+        out["embed"] = (
+            jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02
+        ).astype(dt)
+    if not cfg.tie_embeddings or cfg.embedded_inputs:
+        out["lm_head"] = (
+            jax.random.normal(k2, (cfg.d_model, cfg.vocab))
+            * (1.0 / np.sqrt(cfg.d_model))
+        ).astype(dt)
+    return out
+
+
+def embed_tokens(cfg: ArchConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    h = params["embed"][tokens]
+    return shard(h, "batch", "sequence", None)
+
+
+def logits_head(cfg: ArchConfig, params: dict, h: jax.Array) -> jax.Array:
+    w = params.get("lm_head")
+    if w is None:  # tied
+        w = params["embed"].T
+    return shard(h @ w, "batch", None, "vocab")

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN — the paper's sparse/dense multiphase chain at LM
+scale.
+
+Dispatch (sparse scatter by router choice) -> expert GEMMs (dense) ->
+combine (sparse gather + weighted sum) is structurally SpMM -> GEMM ->
+SpMM.  Three execution paths, mirroring the taxonomy:
+
+  * ``dense``  — every expert processes every token, outputs masked
+                 (the Seq baseline/oracle; E/k x FLOP overhead — smoke
+                 shapes only).
+  * ``ragged`` — sort tokens by expert + ``lax.ragged_dot`` grouped GEMM
+                 (SP-Optimized flavor: no capacity padding, no drops;
+                 single-device fast path).
+  * ``ep``     — explicit expert parallelism for the production mesh:
+                 activations are replicated across the TP/EP ("model")
+                 axis, so each shard locally dispatches into a capacity
+                 buffer for *its own* experts, runs the batched expert
+                 GEMM, combines, and one all-reduce over the model axis
+                 merges the per-shard contributions (Mixtral-style EP;
+                 the all-reduce is the same collective the dense TP MLP
+                 pays).  Implemented as a shard_map island so every
+                 collective is explicit for the roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ArchConfig
+from .sharding import current_mesh, current_rules, shard
+
+
+def init_moe(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(ff)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(jnp.float32),
+        "experts_gate": (jax.random.normal(k2, (e, d, ff)) * s_in).astype(dt),
+        "experts_up": (jax.random.normal(k3, (e, d, ff)) * s_in).astype(dt),
+        "experts_down": (jax.random.normal(k4, (e, ff, d)) * s_out).astype(dt),
+    }
+
+
+def _route(cfg: ArchConfig, p: dict, x2d: jax.Array):
+    """Router: returns (probs (T,k), ids (T,k), aux_loss)."""
+    logits = x2d.astype(jnp.float32) @ p["router"]  # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    probs, ids = jax.lax.top_k(gates, cfg.moe.top_k)
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    e = cfg.moe.n_experts
+    me = gates.mean(axis=0)  # mean router prob per expert
+    ce = jnp.zeros((e,)).at[ids.reshape(-1)].add(1.0) / ids.size  # assignment frac
+    aux = e * jnp.sum(me * ce) * cfg.moe.router_aux_weight
+    return probs, ids, aux
+
+
+def _expert_ffn(cfg: ArchConfig, p: dict, h: jax.Array) -> jax.Array:
+    """Batched gated FFN over an (E, C, d) buffer."""
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = jnp.einsum("ecd,edf->ecf", h, p["experts_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, p["experts_up"])
+    return jnp.einsum("ecf,efd->ecd", act(g) * u, p["experts_down"])
+
+
+# ---------------------------------------------------------------------------
+# Seq baseline: dense (all experts on all tokens)
+# ---------------------------------------------------------------------------
+
+
+def moe_dense(cfg: ArchConfig, p: dict, x: jax.Array):
+    b, s, d = x.shape
+    x2d = x.reshape(-1, d)
+    probs, ids, aux = _route(cfg, p, x2d)
+    e = cfg.moe.n_experts
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = jnp.einsum("td,edf->etf", x2d, p["experts_gate"])
+    u = jnp.einsum("td,edf->etf", x2d, p["experts_up"])
+    y = jnp.einsum("etf,efd->etd", act(g) * u, p["experts_down"])  # (E, T, d)
+    mask = jax.nn.one_hot(ids, e, dtype=y.dtype) * probs[..., None].astype(y.dtype)
+    comb = mask.sum(axis=1)  # (T, E)
+    out = jnp.einsum("te,etd->td", comb, y)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Sort + ragged grouped GEMM (no drops)
+# ---------------------------------------------------------------------------
+
+
+def moe_ragged(cfg: ArchConfig, p: dict, x: jax.Array):
+    b, s, d = x.shape
+    k = cfg.moe.top_k
+    e = cfg.moe.n_experts
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+    probs, ids, aux = _route(cfg, p, x2d)
+    flat_e = ids.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    tok = order // k  # source token per sorted slot
+    xs = x2d[tok]  # (T*k, d) gathered, expert-sorted
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = jax.lax.ragged_dot(xs, p["experts_gate"], counts)
+    u = jax.lax.ragged_dot(xs, p["experts_up"], counts)
+    y = jax.lax.ragged_dot(act(g) * u, p["experts_down"], counts)  # (T*k, d)
+    w = probs.reshape(-1)[order].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[tok].add(y * w[:, None])
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel (production path)
+# ---------------------------------------------------------------------------
+
+
+def _local_capacity(cfg: ArchConfig, tokens_local: int) -> int:
+    c = tokens_local * cfg.moe.top_k * cfg.moe.capacity_factor / cfg.moe.n_experts
+    return max(8, int(-(-c // 8) * 8))  # round up to 8
+
+
+def moe_ep(cfg: ArchConfig, p: dict, x: jax.Array, mesh, rules):
+    """Expert-parallel MoE over the mesh's "experts" axis (shard_map)."""
+    model_axis = rules.experts
+    dp_axes = rules.batch if isinstance(rules.batch, tuple) else (rules.batch,)
+    dp_axes = tuple(a for a in dp_axes if a)
+    n_shards = int(mesh.shape[model_axis])
+    e = cfg.moe.n_experts
+    # pad to a shardable expert count with never-routed dummy experts
+    # (e.g. 40 experts on a 16-way axis -> 48 virtual, 8 idle)
+    e_loc = -(-e // n_shards)
+    e_pad = e_loc * n_shards
+    if e_pad != e:
+        p = dict(p)
+        for name in ("experts_gate", "experts_up", "experts_down"):
+            w = p[name]
+            p[name] = jnp.concatenate(
+                [w, jnp.zeros((e_pad - e, *w.shape[1:]), w.dtype)], axis=0
+            )
+    b, s, d = x.shape
+
+    seq_axis = rules.sequence  # Megatron-SP: tokens arrive seq-sharded
+
+    def local(x_loc, router, w_gate, w_up, w_down):
+        # x_loc: (B_loc, S, d) — replicated over the model axis, or
+        # seq-sharded under sequence parallelism (gathered here in bf16,
+        # results reduce-scattered back — half the boundary traffic of the
+        # replicated all-reduce)
+        if seq_axis:
+            x_loc = jax.lax.all_gather(x_loc, seq_axis, axis=1, tiled=True)
+        bl = x_loc.shape[0]
+        x2d = x_loc.reshape(-1, d)
+        t_loc = x2d.shape[0]
+        probs, ids, aux = _route(cfg, {"router": router}, x2d)
+        shard_id = jax.lax.axis_index(model_axis)
+        lo = shard_id * e_loc
+        cap = _local_capacity(cfg, t_loc)
+        # dispatch only the (token, k) pairs owned by this shard's experts
+        flat_e = ids.reshape(-1)
+        flat_p = probs.reshape(-1)
+        mine = (flat_e >= lo) & (flat_e < lo + e_loc)
+        local_e = jnp.where(mine, flat_e - lo, e_loc)  # e_loc = drop row
+        # position within each local expert (stable order)
+        order = jnp.argsort(jnp.where(mine, local_e, e_loc + 1), stable=True)
+        sorted_e = local_e[order]
+        one = jnp.ones_like(sorted_e)
+        pos = jnp.cumsum(one) - 1
+        start = jnp.zeros((e_loc + 2,), jnp.int32).at[sorted_e + 1].add(one)
+        start = jnp.cumsum(start)[:-1]
+        pos_in_e = pos - start[sorted_e]
+        keep = (sorted_e < e_loc) & (pos_in_e < cap)
+        dest = jnp.where(keep, sorted_e * cap + pos_in_e, e_loc * cap)
+        tok = order // cfg.moe.top_k
+        buf = jnp.zeros((e_loc * cap + 1, d), x2d.dtype)
+        buf = buf.at[dest].set(jnp.where(keep[:, None], x2d[tok], 0.0))
+        h = buf[: e_loc * cap].reshape(e_loc, cap, d)
+        y = _expert_ffn(cfg, {"experts_gate": w_gate, "experts_up": w_up,
+                              "experts_down": w_down}, h)
+        y_flat = jnp.concatenate(
+            [y.reshape(e_loc * cap, d), jnp.zeros((1, d), y.dtype)], axis=0
+        )
+        gathered = y_flat[dest] * jnp.where(keep, flat_p[order], 0.0)[:, None].astype(y.dtype)
+        out = jnp.zeros((t_loc, d), y.dtype).at[tok].add(gathered)
+        # merge expert contributions across the model axis (same collective
+        # a TP MLP would pay); under SP, reduce-scatter back to seq shards
+        out = out.reshape(bl, s, d)
+        if seq_axis:
+            out = jax.lax.psum_scatter(out, seq_axis, scatter_dimension=1,
+                                       tiled=True)
+        else:
+            out = jax.lax.psum(out, model_axis)
+        aux = jax.lax.pmean(aux, (model_axis, *dp_axes))
+        return out, aux
+
+    x_spec = P(dp_axes if dp_axes else None, rules.sequence, None)
+    w_spec = P(model_axis, None, None)  # each shard holds its local experts
+    out, aux = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"],
+      p["experts_gate"], p["experts_up"], p["experts_down"])
+    return out, aux
+
+
+def moe_ffn(cfg: ArchConfig, p: dict, x: jax.Array, policy: str = "auto"):
+    """Dispatch to the right MoE path.  "auto": EP when a mesh is active,
+    ragged grouped-GEMM otherwise."""
+    mesh, rules = current_mesh(), current_rules()
+    if policy == "auto":
+        policy = "ep" if (mesh is not None and rules is not None and rules.experts) else "ragged"
+    if policy == "dense":
+        return moe_dense(cfg, p, x)
+    if policy == "ragged":
+        return moe_ragged(cfg, p, x)
+    if policy == "ep":
+        return moe_ep(cfg, p, x, mesh, rules)
+    raise ValueError(policy)

@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The block: x -> {input branch (linear -> causal conv -> RG-LRU), gate
+branch (linear -> GeLU)} -> elementwise product -> output linear.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = a^(c * r_t),  a = sigmoid(lambda)  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs the linear recurrence with an associative scan (parallel in
+S — the reason the 500k-token shape is lowerable at all); decode is an O(1)
+state update.  The recurrence is a single-phase computation — the paper's
+inter-phase taxonomy does not apply to it (DESIGN.md §Arch-applicability);
+the surrounding local-attention layers use the SP-optimized chunked path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .sharding import shard
+
+_C = 8.0
+
+
+def init_rglru(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d, r = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / np.sqrt(d)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "rg_in": (jax.random.normal(ks[0], (d, r)) * s).astype(dt),
+        "rg_gate": (jax.random.normal(ks[1], (d, r)) * s).astype(dt),
+        "rg_out": (jax.random.normal(ks[2], (r, d)) * (1.0 / np.sqrt(r))).astype(dt),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, r)) * 0.1).astype(dt),
+        "w_a": (jax.random.normal(ks[4], (r, r)) * (1.0 / np.sqrt(r)) * 0.1).astype(dt),
+        "w_x": (jax.random.normal(ks[5], (r, r)) * (1.0 / np.sqrt(r)) * 0.1).astype(dt),
+        "b_a": jnp.zeros((r,), dt),
+        "b_x": jnp.zeros((r,), dt),
+        # lambda init so that a = sigmoid(lambda) ~ 0.9..0.999
+        "lam": jnp.asarray(np.linspace(2.2, 6.9, r), dt),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, R) recurrent state
+    conv: jax.Array  # (B, W-1, R) causal-conv tail
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int):
+        r = cfg.rnn_width
+        dt = jnp.dtype(cfg.dtype)
+        return cls(
+            jnp.zeros((batch, r), dt),
+            jnp.zeros((batch, cfg.conv_width - 1, r), dt),
+        )
+
+
+def _gates(p: dict, u: jax.Array):
+    """u: (..., R) post-conv activations -> (a_t, gated input)."""
+    uf = u.astype(jnp.float32)
+    r_t = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i_t = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -_C * r_t * jax.nn.softplus(-p["lam"].astype(jnp.float32))
+    a_t = jnp.exp(log_a)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a_t**2, 1e-12)) * (i_t * uf)
+    return a_t, b_t
+
+
+def _causal_conv(p: dict, x: jax.Array, tail: jax.Array | None = None):
+    """Depthwise causal conv, width W.  x: (B, S, R)."""
+    w = p["conv_w"].astype(jnp.float32)  # (W, R)
+    width = w.shape[0]
+    xf = x.astype(jnp.float32)
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), jnp.float32)
+    else:
+        pad = tail.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)  # (B, S+W-1, R)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    return out.astype(x.dtype), xp[:, -(width - 1) :].astype(x.dtype)
+
+
+def rglru_block(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence forward (training / prefill), associative scan over S."""
+    u = shard(x @ p["rg_in"], "batch", None, "d_ff")
+    g = shard(x @ p["rg_gate"], "batch", None, "d_ff")
+    u, _ = _causal_conv(p, u)
+    a_t, b_t = _gates(p, u)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+    out = jax.nn.gelu(g.astype(jnp.float32)) * h
+    return shard(out.astype(x.dtype) @ p["rg_out"], "batch", "sequence", None)
+
+
+def rglru_decode(
+    cfg: ArchConfig, p: dict, x: jax.Array, state: RGLRUState
+) -> tuple[jax.Array, RGLRUState]:
+    """One-token decode. x: (B, 1, d)."""
+    u = x @ p["rg_in"]  # (B, 1, R)
+    g = x @ p["rg_gate"]
+    u, tail = _causal_conv(p, u, state.conv)
+    a_t, b_t = _gates(p, u[:, 0])
+    h = a_t * state.h.astype(jnp.float32) + b_t
+    out = jax.nn.gelu(g[:, 0].astype(jnp.float32)) * h
+    out = (out.astype(x.dtype) @ p["rg_out"])[:, None]
+    return out, RGLRUState(h.astype(state.h.dtype), tail)

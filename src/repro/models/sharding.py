@@ -1,0 +1,166 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM substrate.
+
+Model code annotates activations/params with *logical* axis names; the
+rules map them to mesh axes.  With no mesh active every annotation is a
+no-op, so the same model code runs the CPU smoke tests and the 512-chip
+dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    batch: tuple[str, ...] | str | None = None  # e.g. ("pod", "data")
+    sequence: str | None = None  # sequence parallelism (long context)
+    heads: str | None = None  # TP over attention heads
+    d_ff: str | None = None  # TP over MLP hidden
+    experts: str | None = None  # EP over MoE experts
+    vocab: str | None = None  # TP over vocab/logits
+    d_model: str | None = None  # rarely sharded (all-gather heavy)
+
+    def spec(self, *logical: str | None) -> P:
+        out = []
+        for ax in logical:
+            out.append(getattr(self, ax) if ax else None)
+        return P(*out)
+
+
+#: Production rules for the (pod, data, model) / (data, model) meshes.
+def production_rules(multi_pod: bool = False) -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardingRules(
+        batch=dp,
+        sequence=None,
+        heads="model",
+        d_ff="model",
+        experts="model",
+        vocab="model",
+    )
+
+
+def tuned_rules(arch: str, multi_pod: bool = False) -> ShardingRules:
+    """Beyond-baseline sharding strategies from the §Perf hillclimb.
+
+    * default: baseline TP + Megatron-style sequence parallelism (the
+      residual stream shards on seq over the model axis; per-layer
+      all-reduces become reduce-scatter/all-gather pairs).
+    (A pure-DP variant for xlstm-1.3b was hypothesized and REFUTED —
+    replicated-parameter gradient all-reduces and per-timestep backward
+    saves made it 6x worse; see EXPERIMENTS.md §Perf X2.  The effective
+    fix was pinning the sLSTM recurrence to batch-only sharding inside
+    the model itself.)
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    base = production_rules(multi_pod)
+    from dataclasses import replace
+
+    return replace(base, sequence="model")
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def current_mesh() -> jax.sharding.Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: jax.sharding.Mesh | None, rules: ShardingRules | None):
+    prev = (current_mesh(), current_rules())
+    _STATE.mesh, _STATE.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate an activation with logical axes; no-op without a mesh.
+    Axes the mesh does not divide are dropped (e.g. 56 q-heads on a 16-way
+    model axis) rather than forcing GSPMD padding churn."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = _divisible(rules.spec(*logical), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by tree-path pattern
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: tuple[tuple[str, tuple[str | None, ...]], ...] = (
+    # name-fragment -> logical axes per dim (matched right-aligned);
+    # first match wins, so lm_head must precede the "embed" fragment
+    ("lm_head", (None, "vocab")),
+    ("embed", ("vocab", None)),
+    ("wq", (None, "heads")),
+    ("wk", (None, "heads")),
+    ("wv", (None, "heads")),
+    ("wo", ("heads", None)),
+    ("w_gate", (None, "d_ff")),
+    ("w_up", (None, "d_ff")),
+    ("w_down", ("d_ff", None)),
+    ("router", (None, "experts")),
+    # expert weights shard over the expert (EP) axis only — d_ff is small
+    # per expert and the EP axis already consumes the mesh's model axis
+    ("experts_gate", ("experts", None, None)),
+    ("experts_up", ("experts", None, None)),
+    ("experts_down", ("experts", None, None)),
+    ("rg_in", (None, "d_ff")),
+    ("rg_gate", (None, "d_ff")),
+    ("rg_out", ("d_ff", None)),
+    ("lstm_qkv", (None, "heads")),
+    ("lstm_out", ("heads", None)),
+)
+
+
+def spec_for_param(path: str, ndim: int, rules: ShardingRules) -> P:
+    for frag, logical in _PARAM_RULES:
+        if frag in path:
+            axes = [None] * ndim
+            # right-align the logical axes onto the trailing dims
+            lg = logical[-ndim:] if ndim <= len(logical) else logical
+            axes[-len(lg):] = [getattr(rules, a) if a else None for a in lg]
+            # stacked-layer leading dim stays unsharded
+            return P(*axes)
+    return P()  # replicate (norms, biases, gates)
+
+
+def _divisible(spec: P, shape: tuple, mesh: jax.sharding.Mesh) -> P:
+    """Drop sharding on dims the mesh axis does not divide (e.g. the
+    49,155-row granite-moe vocab on a 16-way axis -> replicate)."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        out.append(ax if (i < len(shape) and shape[i] % size == 0) else None)
+    return P(*out)
+
+
+def param_shardings(params, mesh: jax.sharding.Mesh, rules: ShardingRules):
+    """NamedSharding pytree for a parameter pytree."""
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        spec = spec_for_param(pstr, leaf.ndim, rules)
+        return NamedSharding(mesh, _divisible(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)

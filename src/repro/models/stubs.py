@@ -1,0 +1,33 @@
+"""Modality-frontend stubs for the VLM/audio backbones.
+
+Per the assignment, ``[vlm]``/``[audio]`` entries specify the transformer
+BACKBONE only; the modality frontend is a STUB whose ``input_specs()``
+provides precomputed frame/patch embeddings.  These helpers generate
+seeded synthetic embeddings for the smoke tests and examples, and shape
+structs for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+
+def synthetic_embeddings(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    """Stand-in for the vision tower / EnCodec encoder output."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32) * 0.02
+    return jnp.asarray(x, dtype=jnp.dtype(cfg.dtype))
+
+
+def synthetic_tokens(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(batch, seq)), dtype=jnp.int32)
+
+
+def make_inputs(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    if cfg.embedded_inputs:
+        return synthetic_embeddings(cfg, batch, seq, seed)
+    return synthetic_tokens(cfg, batch, seq, seed)

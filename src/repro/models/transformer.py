@@ -1,0 +1,296 @@
+"""Model assembly: block pattern -> scanned layer stacks -> LM steps.
+
+Layers are stacked per *pattern position* and walked with ``lax.scan`` so
+the HLO stays one-block-sized regardless of depth (60-layer 34B models
+lower in seconds; this is also what makes the 512-device dry-run
+tractable).  Heterogeneous patterns (RecurrentGemma's rglru/rglru/local,
+xLSTM's 7 mLSTM : 1 sLSTM) scan over super-blocks; the remainder layers
+(pattern not dividing n_layers) run unscanned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import KVCache, attention, decode_attention, init_attention
+from .config import ArchConfig
+from .layers import (
+    embed_tokens,
+    init_embeddings,
+    init_mlp,
+    init_norm_scale,
+    logits_head,
+    mlp,
+    norm,
+)
+from .moe import init_moe, moe_ffn
+from .rglru import RGLRUState, init_rglru, rglru_block, rglru_decode
+from .sharding import shard
+from .xlstm import (
+    MLSTMState,
+    SLSTMState,
+    init_mlstm,
+    init_slstm,
+    mlstm_block,
+    mlstm_decode,
+    slstm_block,
+    slstm_decode,
+)
+
+# ---------------------------------------------------------------------------
+# Per-kind block init / apply / decode
+# ---------------------------------------------------------------------------
+
+
+def init_block(cfg: ArchConfig, kind: str, rng: jax.Array) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p: dict[str, Any] = {"ln1": init_norm_scale(cfg)}
+    if kind in ("attn", "local", "moe"):
+        p["attn"] = init_attention(cfg, k1)
+        p["ln2"] = init_norm_scale(cfg)
+        if kind == "moe":
+            p["moe"] = init_moe(cfg, k2)
+        else:
+            p["mlp"] = init_mlp(cfg, k2)
+    elif kind == "rglru":
+        p["rg"] = init_rglru(cfg, k1)
+        p["ln2"] = init_norm_scale(cfg)
+        p["mlp"] = init_mlp(cfg, k2)
+    elif kind == "mlstm":
+        p["mlstm"] = init_mlstm(cfg, k1)
+    elif kind == "slstm":
+        p["slstm"] = init_slstm(cfg, k1)
+    else:
+        raise KeyError(kind)
+    return p
+
+
+def apply_block(cfg: ArchConfig, kind: str, p: dict, x, positions):
+    """Full-sequence block application. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(cfg, x, p["ln1"])
+    if kind in ("attn", "local", "moe"):
+        win = cfg.window if kind == "local" else 0
+        x = x + attention(cfg, p["attn"], h, positions, window=win)
+        h2 = norm(cfg, x, p["ln2"])
+        if kind == "moe":
+            ff, aux = moe_ffn(cfg, p["moe"], h2)
+            x = x + ff
+        else:
+            x = x + mlp(cfg, p["mlp"], h2)
+    elif kind == "rglru":
+        x = x + rglru_block(cfg, p["rg"], h)
+        x = x + mlp(cfg, p["mlp"], norm(cfg, x, p["ln2"]))
+    elif kind == "mlstm":
+        x = x + mlstm_block(cfg, p["mlstm"], h)
+    elif kind == "slstm":
+        x = x + slstm_block(cfg, p["slstm"], h)
+    return x, aux
+
+
+def init_block_state(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "moe"):
+        return KVCache.zeros(cfg, batch, max_len)
+    if kind == "local":
+        return KVCache.zeros(cfg, batch, max_len, window=cfg.window)
+    if kind == "rglru":
+        return RGLRUState.zeros(cfg, batch)
+    if kind == "mlstm":
+        return MLSTMState.zeros(cfg, batch)
+    if kind == "slstm":
+        return SLSTMState.zeros(cfg, batch)
+    raise KeyError(kind)
+
+
+def decode_block(cfg: ArchConfig, kind: str, p: dict, x, state, index):
+    """One-token block application. Returns (x, new_state)."""
+    h = norm(cfg, x, p["ln1"])
+    if kind in ("attn", "local", "moe"):
+        win = cfg.window if kind == "local" else 0
+        a, state = decode_attention(cfg, p["attn"], h, state, index, window=win)
+        x = x + a
+        h2 = norm(cfg, x, p["ln2"])
+        if kind == "moe":
+            ff, _ = moe_ffn(cfg, p["moe"], h2)
+            x = x + ff
+        else:
+            x = x + mlp(cfg, p["mlp"], h2)
+    elif kind == "rglru":
+        r, state = rglru_decode(cfg, p["rg"], h, state)
+        x = x + r
+        x = x + mlp(cfg, p["mlp"], norm(cfg, x, p["ln2"]))
+    elif kind == "mlstm":
+        m, state = mlstm_decode(cfg, p["mlstm"], h, state)
+        x = x + m
+    elif kind == "slstm":
+        s, state = slstm_decode(cfg, p["slstm"], h, state)
+        x = x + s
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameters: scanned groups + remainder
+# ---------------------------------------------------------------------------
+
+
+def _layer_plan(cfg: ArchConfig) -> tuple[int, tuple[str, ...], tuple[str, ...]]:
+    """(#scanned super-blocks, pattern, remainder kinds)."""
+    pat = cfg.block_pattern
+    reps = cfg.n_layers // len(pat)
+    rem = cfg.layer_kinds[reps * len(pat) :]
+    return reps, pat, rem
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array) -> dict:
+    reps, pat, rem = _layer_plan(cfg)
+    k_embed, k_layers, k_rem = jax.random.split(rng, 3)
+    scanned = []
+    for pos, kind in enumerate(pat):
+        keys = jax.random.split(jax.random.fold_in(k_layers, pos), max(reps, 1))
+        stacks = [init_block(cfg, kind, k) for k in keys[:reps]]
+        if reps:
+            scanned.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacks))
+        else:
+            scanned.append(None)
+    remainder = [
+        init_block(cfg, kind, jax.random.fold_in(k_rem, i))
+        for i, kind in enumerate(rem)
+    ]
+    return {
+        "embeddings": init_embeddings(cfg, k_embed),
+        "final_norm": init_norm_scale(cfg),
+        "scanned": scanned,
+        "remainder": remainder,
+    }
+
+
+def forward(cfg: ArchConfig, params: dict, inputs: jax.Array, positions=None):
+    """Training/prefill forward.  ``inputs``: (B, S) int tokens, or
+    (B, S, d) embeddings for the VLM/audio stub frontends.
+    Returns (logits, aux_loss)."""
+    if cfg.embedded_inputs:
+        h = inputs.astype(jnp.dtype(cfg.dtype))
+        b, s = inputs.shape[:2]
+    else:
+        h = embed_tokens(cfg, params["embeddings"], inputs)
+        b, s = inputs.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = shard(h, "batch", "sequence", None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    reps, pat, rem = _layer_plan(cfg)
+    if reps:
+
+        def superblock(carry, stacked_p):
+            x, aux = carry
+            for pos, kind in enumerate(pat):
+                x, a = apply_block(cfg, kind, stacked_p[pos], x, positions)
+                aux = aux + a
+            return (x, aux), None
+
+        body = jax.checkpoint(superblock) if cfg.remat else superblock
+        (h, aux_total), _ = jax.lax.scan(
+            body, (h, aux_total), params["scanned"]
+        )
+    for kind, p in zip(rem, params["remainder"]):
+        h, a = apply_block(cfg, kind, p, h, positions)
+        aux_total = aux_total + a
+
+    h = norm(cfg, h, params["final_norm"])
+    logits = logits_head(cfg, params["embeddings"], h)
+    return logits, aux_total
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Decode-state pytree matching the scanned/remainder structure."""
+    reps, pat, rem = _layer_plan(cfg)
+    scanned = []
+    for kind in pat:
+        states = [init_block_state(cfg, kind, batch, max_len) for _ in range(reps)]
+        scanned.append(
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states) if reps else None
+        )
+    remainder = [init_block_state(cfg, kind, batch, max_len) for kind in rem]
+    return {"scanned": scanned, "remainder": remainder}
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache, tokens: jax.Array, index):
+    """One decode step for the whole model.
+
+    ``tokens``: (B, 1) ints (or (B, 1, d) embeddings); ``index``: scalar
+    position.  Returns (logits (B, 1, vocab), new_cache)."""
+    if cfg.embedded_inputs:
+        h = tokens.astype(jnp.dtype(cfg.dtype))
+    else:
+        h = embed_tokens(cfg, params["embeddings"], tokens)
+    h = shard(h, "batch", None, None)
+    reps, pat, rem = _layer_plan(cfg)
+
+    new_scanned = []
+    if reps:
+
+        def superblock(x, xs):
+            stacked_p, stacked_s = xs
+            new_states = []
+            for pos, kind in enumerate(pat):
+                x, ns = decode_block(cfg, kind, stacked_p[pos], x, stacked_s[pos], index)
+                new_states.append(ns)
+            return x, tuple(new_states)
+
+        h, states_out = jax.lax.scan(
+            superblock, h, (params["scanned"], tuple(cache["scanned"]))
+        )
+        new_scanned = list(states_out)
+    new_rem = []
+    for kind, p, st in zip(rem, params["remainder"], cache["remainder"]):
+        h, ns = decode_block(cfg, kind, p, h, st, index)
+        new_rem.append(ns)
+
+    h = norm(cfg, h, params["final_norm"])
+    logits = logits_head(cfg, params["embeddings"], h)
+    return logits, {"scanned": new_scanned, "remainder": new_rem}
+
+
+def prefill(cfg: ArchConfig, params: dict, inputs: jax.Array):
+    """Prefill: token-by-token is wasteful, so run the full forward and
+    additionally build the decode cache by replaying each block's KV/state
+    path.  Used by the serving example at smoke scale; the 32k dry-run cell
+    lowers :func:`forward` (the compute-dominant part)."""
+    if cfg.embedded_inputs:
+        b, s = inputs.shape[:2]
+    else:
+        b, s = inputs.shape
+    logits, _ = forward(cfg, params, inputs)
+    cache = init_cache(cfg, b, s)
+    # replay decode steps to populate the cache exactly
+    def one(i, carry):
+        cache, = carry
+        tok = jax.lax.dynamic_slice_in_dim(inputs, i, 1, axis=1)
+        _, cache = decode_step(cfg, params, cache, tok, i)
+        return (cache,)
+
+    (cache,) = jax.lax.fori_loop(0, s, one, (cache,))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ArchConfig, params, batch) -> jax.Array:
+    """Causal LM loss.  batch: {"inputs": (B,S) or (B,S,d), "labels": (B,S)}."""
+    logits, aux = forward(cfg, params, batch["inputs"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))

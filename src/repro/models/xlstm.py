@@ -1,0 +1,268 @@
+"""xLSTM blocks (arXiv:2405.04517): chunkwise-parallel mLSTM + sLSTM.
+
+mLSTM is a matrix-memory linear recurrence with exponential gating:
+
+    m_t = max(log f_t + m_{t-1}, i_t)
+    C_t = e^{log f_t + m_{t-1} - m_t} C_{t-1} + e^{i_t - m_t} v_t k_t^T
+    n_t = e^{log f_t + m_{t-1} - m_t} n_{t-1} + e^{i_t - m_t} k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, e^{-m_t})
+
+Training uses the **chunkwise-parallel form**: within a chunk of length L
+the contribution of steps s<=t is an attention-like masked GEMM (all the
+b_t log-decay terms cancel into a per-row stabilizer), and only the
+(C, n, m) state crosses chunk boundaries via lax.scan.  In the paper's
+taxonomy this is SP-Generic pipelining of a two-phase chain (intra-chunk
+GEMMs produce a tile the inter-chunk recurrence consumes) — see DESIGN.md.
+Decode is the O(1) recurrence.
+
+sLSTM keeps scalar memories with a *nonlinear* recurrent connection
+(block-diagonal R acting on h_{t-1}), so it is inherently sequential:
+lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .sharding import shard
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(rng, 4)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "lstm_qkv": (jax.random.normal(ks[0], (d, 3 * d)) * s).astype(_dt(cfg)),
+        "lstm_out": (jax.random.normal(ks[1], (d, d)) * s).astype(_dt(cfg)),
+        "w_if": (jax.random.normal(ks[2], (d, 2 * h)) * s).astype(_dt(cfg)),
+        "b_i": jnp.zeros((h,), _dt(cfg)),
+        # forget bias > 0 so f ~ sigmoid(3) ~ 0.95 at init
+        "b_f": jnp.full((h,), 3.0, _dt(cfg)),
+        "w_o": (jax.random.normal(ks[3], (d, d)) * s).astype(_dt(cfg)),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, Dv, Dk)
+    n: jax.Array  # (B, H, Dk)
+    m: jax.Array  # (B, H)
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int):
+        h, hd = cfg.n_heads, cfg.head_dim
+        return cls(
+            jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, h, hd), jnp.float32),
+            jnp.full((batch, h), -1e30, jnp.float32),
+        )
+
+
+def _mlstm_qkv_gates(cfg: ArchConfig, p: dict, x: jax.Array):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = x @ p["lstm_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).astype(jnp.float32)
+    k = k.reshape(b, s, h, hd).astype(jnp.float32) / np.sqrt(hd)
+    v = v.reshape(b, s, h, hd).astype(jnp.float32)
+    gif = (x @ p["w_if"]).reshape(b, s, 2, h).astype(jnp.float32)
+    i_raw = gif[:, :, 0] + p["b_i"].astype(jnp.float32)
+    f_raw = gif[:, :, 1] + p["b_f"].astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid
+    o = jax.nn.sigmoid((x @ p["w_o"]).astype(jnp.float32))
+    return q, k, v, i_raw, log_f, o
+
+
+def _mlstm_chunk(q, k, v, i_raw, log_f, state: MLSTMState):
+    """One chunk (B, L, H, ...) given incoming state; returns (h, state)."""
+    b_, l, h, hd = q.shape
+    # per-position cumulative decay within the chunk
+    b_cum = jnp.cumsum(log_f, axis=1)  # (B, L, H)
+    a = i_raw - b_cum  # a_s = i_s - b_s
+    run_max = jax.lax.cummax(a, axis=1)  # M_t
+    mbar = jnp.maximum(state.m[:, None], run_max)  # (B, L, H)
+    m_t = b_cum + mbar  # true stabilizer (for the denominator floor)
+
+    # intra-chunk masked attention-like term:
+    # weight[t, s] = exp(a_s - mbar_t) for s <= t (the b_t decay cancels
+    # into the row stabilizer mbar_t — that is what makes the chunk a GEMM)
+    scores = jnp.einsum("blhd,bshd->bhls", q, k)  # (B, H, L, L)
+    a_s = a.transpose(0, 2, 1)[:, :, None, :]  # (B, H, 1, L)
+    mb_t = mbar.transpose(0, 2, 1)[:, :, :, None]  # (B, H, L, 1)
+    w = jnp.exp(a_s - mb_t)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    w = jnp.where(mask[None, None], w, 0.0)
+    sw = scores * w
+    intra_num = jnp.einsum("bhls,bshd->blhd", sw, v)
+    intra_den = sw.sum(axis=-1).transpose(0, 2, 1)  # (B, L, H)
+
+    # inter-chunk (incoming state) term
+    scale_in = jnp.exp(state.m[:, None] - mbar)  # (B, L, H)
+    inter_num = jnp.einsum("blhd,bhed->blhe", q, state.c) * scale_in[..., None]
+    inter_den = jnp.einsum("blhd,bhd->blh", q, state.n) * scale_in
+
+    num = intra_num + inter_num
+    den = intra_den + inter_den
+    floor = jnp.exp(-m_t)
+    h_out = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+
+    # state update
+    big_b = b_cum[:, -1]  # (B, H)
+    mbar_l = mbar[:, -1]
+    m_out = big_b + mbar_l
+    decay_state = jnp.exp(state.m - mbar_l)  # (B, H)
+    wk = jnp.exp(a - mbar_l[:, None])  # (B, L, H)
+    c_out = state.c * decay_state[..., None, None] + jnp.einsum(
+        "bshd,bshe,bsh->bhde", v, k, wk
+    )
+    n_out = state.n * decay_state[..., None] + jnp.einsum("bshd,bsh->bhd", k, wk)
+    return h_out, MLSTMState(c_out, n_out, m_out)
+
+
+def mlstm_block(cfg: ArchConfig, p: dict, x: jax.Array, chunk: int = 256) -> jax.Array:
+    """Full-sequence mLSTM (training/prefill) via chunkwise scan."""
+    b, s, d = x.shape
+    h_heads, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, i_raw, log_f, o = _mlstm_qkv_gates(cfg, p, x)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def split(t):  # (B, S, ...) -> (n, B, L, ...)
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1)
+        )
+
+    qs, ks_, vs, is_, fs = map(split, (q, k, v, i_raw, log_f))
+
+    def step(state, xs):
+        qc, kc, vc, ic, fc = xs
+        h_out, state = _mlstm_chunk(qc, kc, vc, ic, fc, state)
+        return state, h_out
+
+    state0 = MLSTMState.zeros(cfg, b)
+    _, hs = jax.lax.scan(step, state0, (qs, ks_, vs, is_, fs))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h_heads, hd)
+    hs = hs[:, :s]
+    out = (o.reshape(b, s, d) * hs.reshape(b, s, d).astype(jnp.float32)).astype(x.dtype)
+    return shard(out @ p["lstm_out"], "batch", "sequence", None)
+
+
+def mlstm_decode(
+    cfg: ArchConfig, p: dict, x: jax.Array, state: MLSTMState
+) -> tuple[jax.Array, MLSTMState]:
+    """One-token decode: the O(1) recurrence.  x: (B, 1, d)."""
+    b = x.shape[0]
+    q, k, v, i_raw, log_f, o = _mlstm_qkv_gates(cfg, p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B, H, D)
+    i_raw, log_f = i_raw[:, 0], log_f[:, 0]  # (B, H)
+    m_new = jnp.maximum(log_f + state.m, i_raw)
+    decay = jnp.exp(log_f + state.m - m_new)
+    inp = jnp.exp(i_raw - m_new)
+    c = state.c * decay[..., None, None] + jnp.einsum("bhd,bhe->bhde", v, k) * inp[..., None, None]
+    n = state.n * decay[..., None] + k * inp[..., None]
+    num = jnp.einsum("bhde,bhe->bhd", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    out = (o[:, 0] * h.reshape(b, -1)).astype(x.dtype)[:, None]
+    return shard(out @ p["lstm_out"], "batch", None, None), MLSTMState(c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ArchConfig, rng: jax.Array) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(rng, 3)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "lstm_w": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(_dt(cfg)),
+        # block-diagonal recurrent weights, one block per head
+        "lstm_r": (
+            jax.random.normal(ks[1], (h, hd, 4 * hd)) * (1.0 / np.sqrt(hd)) * 0.5
+        ).astype(_dt(cfg)),
+        "lstm_out": (jax.random.normal(ks[2], (d, d)) * s).astype(_dt(cfg)),
+        "bias": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ).astype(_dt(cfg)),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+    @classmethod
+    def zeros(cls, cfg: ArchConfig, batch: int):
+        d = cfg.d_model
+        z = lambda: jnp.zeros((batch, d), jnp.float32)
+        return cls(z(), z(), z(), jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_step(cfg: ArchConfig, p: dict, wx_t: jax.Array, state: SLSTMState):
+    """wx_t: (B, 4D) precomputed input projection for this step."""
+    b = wx_t.shape[0]
+    h_heads, hd = cfg.n_heads, cfg.head_dim
+    h_prev = state.h.reshape(b, h_heads, hd)
+    rh = jnp.einsum("bhd,hde->bhe", h_prev, p["lstm_r"].astype(jnp.float32))
+    rh = rh.reshape(b, h_heads, 4, hd).transpose(0, 2, 1, 3).reshape(b, 4 * cfg.d_model)
+    pre = wx_t.astype(jnp.float32) + rh + p["bias"].astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + state.m, i_raw)
+    decay = jnp.exp(log_f + state.m - m_new)
+    inp = jnp.exp(i_raw - m_new)
+    c = decay * state.c + inp * jnp.tanh(z_raw)
+    n = decay * state.n + inp
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, jnp.exp(-m_new))
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_block(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence sLSTM: sequential lax.scan over time.
+
+    The recurrence is pinned to batch-only sharding: any model-axis
+    sharding on the carry would put a collective inside the 4096-step
+    loop (measured: an 825 GB/step all-reduce storm — §Perf X1)."""
+    b, s, d = x.shape
+    wx = shard(x @ p["lstm_w"], "batch", None, None)  # (B, S, 4D)
+
+    def step(state, wx_t):
+        state = _slstm_step(cfg, p, wx_t, state)
+        state = SLSTMState(*(shard(t, "batch", None) for t in state))
+        return state, state.h
+
+    state0 = SLSTMState.zeros(cfg, b)
+    _, hs = jax.lax.scan(step, state0, wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)  # (B, S, D)
+    return shard(hs @ p["lstm_out"], "batch", "sequence", None)
+
+
+def slstm_decode(
+    cfg: ArchConfig, p: dict, x: jax.Array, state: SLSTMState
+) -> tuple[jax.Array, SLSTMState]:
+    wx = (x @ p["lstm_w"])[:, 0]
+    state = _slstm_step(cfg, p, wx, state)
+    out = state.h.astype(x.dtype)[:, None] @ p["lstm_out"]
+    return shard(out, "batch", None, None), state

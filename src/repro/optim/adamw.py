@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay, pytree-native (no optax dependency).
+
+State is a pytree congruent with params (m, v per leaf), so it shards
+exactly like the parameters (ZeRO-1 style sharding is applied by the
+launcher via param_shardings on the state leaves).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip_norm: float | None = 1.0,
+):
+    """Returns (init_fn, update_fn)."""
+
+    def init(params) -> AdamWState:
+        zeros = lambda p: jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), p
+        )
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+        if grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1.0 - b1) * gf
+            v_new = b2 * v + (1.0 - b2) * gf * gf
+            mh = m_new / b1t
+            vh = v_new / b2t
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m_new, v_new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v)
+
+    return init, update
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def sgd(lr: float = 0.1):
+    def init(params):
+        return AdamWState(jnp.zeros((), jnp.int32), None, None)
+
+    def update(grads, state, params):
+        new_p = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(
+                p.dtype
+            ),
+            params,
+            grads,
+        )
+        return new_p, AdamWState(state.step + 1, None, None)
+
+    return init, update

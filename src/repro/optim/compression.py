@@ -1,0 +1,68 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+A distributed-optimization trick for 1000+ node scale: quantize each
+gradient leaf to int8 with a per-leaf scale before the data-parallel
+all-reduce, keep the quantization residual locally and add it back the
+next step (error feedback makes the compression unbiased over time).
+
+Used inside shard_map by the launcher (repro.launch.train) when
+``--grad-compression int8`` is set; the pure functions here are also unit
+tested on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # pytree congruent with grads
+
+
+def init_error_feedback(grads_like) -> EFState:
+    return EFState(
+        jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+        )
+    )
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantization -> (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState):
+    """Quantize grads+residual; returns (quantized pytree of (q, scale),
+    new residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return (q, s), gf - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = treedef.unflatten([p[0] for p in pairs])
+    res = treedef.unflatten([p[1] for p in pairs])
+    return qtree, EFState(res)
+
+
+def decompress_grads(qtree):
+    def is_pair(x):
+        return isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+
+    return jax.tree_util.tree_map(
+        lambda p: dequantize_int8(*p), qtree, is_leaf=is_pair
+    )

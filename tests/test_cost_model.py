@@ -1,0 +1,140 @@
+"""Hand-verified cases for the per-phase cost model (paper Table 1)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AcceleratorConfig,
+    GNNLayerWorkload,
+    PhaseOrder,
+    aggregation_cost,
+    combination_cost,
+    intra,
+    named_dataflow,
+    pipelined_elements,
+    table3_buffering,
+)
+
+HW = AcceleratorConfig(n_pes=512, gb_bandwidth=10**9)  # no bandwidth stalls
+
+
+class TestCombinationTraffic:
+    """GEMM V=G=F=4 with 2x2x2 tiles: trips = 2 per dim."""
+
+    def test_output_stationary(self):
+        # {VsGs}Ft — Table 1 row 1: inputs and weights stream every step,
+        # partial sums accumulate temporally in the PE.
+        df = intra("VsGsFt", "cmb", V=2, G=2)
+        c = combination_cost(df, 4, 4, 4, HW)
+        assert c.cycles == 2 * 2 * 4  # T_F = 1 -> 4 F-steps
+        assert c.gb_reads["inp"] == 2 * 2 * 4 * (2 * 1)  # re-read per G tile
+        assert c.gb_reads["wt"] == 2 * 2 * 4 * (1 * 2)
+        assert c.gb_writes["out"] == 16  # written once, no psum spills
+        assert "psum" not in c.gb_writes
+
+    def test_weight_stationary(self):
+        # {GsFs}Vt — Table 1 row 2: weights stay, V streams under them.
+        df = intra("GsFsVt", "cmb", G=2, F=2)
+        c = combination_cost(df, 4, 4, 4, HW)
+        assert c.cycles == 2 * 2 * 4
+        # each weight tile fetched exactly once: F*G elements total
+        assert c.gb_reads["wt"] == 16
+        # reduction loop (F) is above the V loop -> psums spill
+        assert c.gb_writes["psum"] > 0
+        assert c.gb_writes["out"] == 16
+
+    def test_input_stationary(self):
+        # {VsFs}Gt — Table 1 row 3: input tile stays, weights stream.
+        df = intra("VsFsGt", "cmb", V=2, F=2)
+        c = combination_cost(df, 4, 4, 4, HW)
+        assert c.gb_reads["inp"] == 16  # each input tile once
+        # weight re-fetched per (V, G) step
+        assert c.gb_reads["wt"] == 2 * 2 * 4 * 2
+
+    def test_macs_invariant(self):
+        for spec in ["VsGsFt", "GsFsVt", "VsFsGt", "VtGtFt", "FsGsVt"]:
+            df = intra(spec, "cmb", V=2, G=2, F=2)
+            assert combination_cost(df, 8, 6, 10, HW).macs == 8 * 6 * 10
+
+
+class TestAggregationCost:
+    nnz = np.array([3, 1, 2, 2])
+
+    def test_lockstep_evil_row(self):
+        # T_V = 2, temporal N: tile trip counts are the tile max (lockstep)
+        df = intra("VsFsNt", "agg", V=2, F=2)
+        c = aggregation_cost(df, self.nnz, 4, HW)
+        assert c.cycles == 2 * (3 + 2)  # f_trips=2, max nnz per tile 3,2
+        assert c.macs == 8 * 4
+
+    def test_spatial_n_compresses_depth(self):
+        df = intra("VsFsNs", "agg", V=2, F=2, N=2)
+        c = aggregation_cost(df, self.nnz, 4, HW)
+        assert c.cycles == 2 * (2 + 1)  # ceil(3/2)+ceil(2/2)
+
+    def test_adjacency_reread_when_f_outside_n(self):
+        df = intra("VsFsNt", "agg", V=2, F=2)
+        c = aggregation_cost(df, self.nnz, 4, HW)
+        assert c.gb_reads["adj"] == 8 * 2  # per F pass
+        df2 = intra("VsNtFs", "agg", V=2, F=2)
+        c2 = aggregation_cost(df2, self.nnz, 4, HW)
+        assert c2.gb_reads["adj"] == 8
+
+    def test_psum_spill_when_n_outside_f(self):
+        df = intra("VsNtFs", "agg", V=2, F=2)
+        c = aggregation_cost(df, self.nnz, 4, HW)
+        assert c.gb_writes["psum"] > 0
+        df2 = intra("VsFsNt", "agg", V=2, F=2)
+        c2 = aggregation_cost(df2, self.nnz, 4, HW)
+        assert "psum" not in c2.gb_writes
+
+    def test_gathered_input_no_reuse(self):
+        df = intra("VsFsNt", "agg", V=2, F=2)
+        c = aggregation_cost(df, self.nnz, 4, HW)
+        assert c.gb_reads["inp"] == 8 * 4  # E x feat
+
+    def test_footprint_guard(self):
+        df = intra("VsFsNs", "agg", V=64, F=64, N=4)
+        with pytest.raises(ValueError, match="PE budget"):
+            aggregation_cost(df, self.nnz, 4, HW)
+
+
+class TestTable3Buffering:
+    wl = GNNLayerWorkload(np.full(64, 4), f_in=32, g_out=8)
+
+    def test_seq_full_intermediate(self):
+        df = named_dataflow("Seq-Nt", T_V_AGG=4, T_F_AGG=4)
+        assert table3_buffering(df, self.wl) == 64 * 32
+
+    def test_sp_optimized_zero(self):
+        df = named_dataflow("EnGN", T_V_AGG=4, T_F_AGG=4, T_V_CMB=4, T_F_CMB=4)
+        assert table3_buffering(df, self.wl) == 0
+
+    def test_pp_row_granularity(self):
+        # PP row: 2 x T_V_max x F
+        df = named_dataflow("HyGCN", T_F_AGG=8, T_V_CMB=4, T_G=8)
+        assert df.granularity.value == "row"
+        assert table3_buffering(df, self.wl) == 2 * 4 * 32
+
+    def test_pp_element_granularity(self):
+        from repro.core import GNNDataflow, InterPhase, intra as mk
+
+        df = GNNDataflow(
+            InterPhase.PP,
+            PhaseOrder.AC,
+            mk("VsFsNt", "agg", V=4, F=8),
+            mk("VsFsGt", "cmb", V=4, F=8),
+        )
+        assert df.granularity.value == "element"
+        assert table3_buffering(df, self.wl) == 2 * 4 * 8
+
+    def test_pel_max_of_tile_sizes(self):
+        # imbalanced tiles: Pel uses the max per dim (paper Sec. 4.4)
+        from repro.core import GNNDataflow, InterPhase, intra as mk
+
+        df = GNNDataflow(
+            InterPhase.PP,
+            PhaseOrder.AC,
+            mk("VsFsNt", "agg", V=2, F=8),
+            mk("VsFsGt", "cmb", V=4, F=4),
+        )
+        assert pipelined_elements(df, self.wl) == 4 * 8

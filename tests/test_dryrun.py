@@ -1,0 +1,210 @@
+"""Dry-run infrastructure tests: HLO accounting, analytic FLOPs, mesh
+construction, and one real 512-device cell (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch.analytic import cell_flops, cell_hbm_floor_bytes
+from repro.launch.hlo import (
+    collective_bytes,
+    collective_bytes_scaled,
+    execution_counts,
+    shape_bytes,
+    while_trip_counts,
+)
+from repro.launch.roofline import model_flops
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(script: str, timeout=600):
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=REPO, timeout=timeout,
+    )
+
+
+class TestHloParsing:
+    HLO = textwrap.dedent(
+        """
+        HloModule test
+
+        %region_body (p: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+          %ag = f32[8,64]{1,0} all-gather(%x), replica_groups=[4,4]<=[16], dimensions={1}
+          %ar = f32[8,64]{1,0} all-reduce(%ag), replica_groups=[2,8]<=[16]
+        }
+
+        %region_cond (p: (s32[], f32[8,64])) -> pred[] {
+          %lt = pred[] compare(%a, %b)
+        }
+
+        ENTRY %main (a: f32[8,64]) -> f32[8,64] {
+          %w = (s32[], f32[8,64]) while(%t), condition=%region_cond, body=%region_body, backend_config={"known_trip_count":{"n":"12"}}
+          %rs = f32[8,16]{1,0} reduce-scatter(%y), replica_groups=[4,4]<=[16], dimensions={1}
+          %cp = bf16[4,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+        }
+        """
+    )
+
+    def test_shape_bytes(self):
+        assert shape_bytes("f32[8,64]{1,0}") == 8 * 64 * 4
+        assert shape_bytes("bf16[4,4]") == 32
+        assert shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+        assert shape_bytes("pred[]") == 1
+
+    def test_trip_counts(self):
+        assert while_trip_counts(self.HLO) == [12]
+
+    def test_execution_counts_propagate_into_body(self):
+        mult = execution_counts(self.HLO)
+        assert mult["region_body"] == 12
+        assert mult["main"] == 1
+
+    def test_unscaled_vs_scaled(self):
+        raw = collective_bytes(self.HLO)
+        scaled = collective_bytes_scaled(self.HLO)
+        # in-body ops multiply by 12; entry ops do not
+        assert scaled.count_by_op["all-gather"] == 12
+        assert scaled.count_by_op["reduce-scatter"] == 1
+        ag_operand = (8 * 64 * 4) // 4  # result / participants
+        assert raw.bytes_by_op["all-gather"] == ag_operand
+        assert scaled.bytes_by_op["all-gather"] == 12 * ag_operand
+        # reduce-scatter operand = result * participants
+        assert scaled.bytes_by_op["reduce-scatter"] == 8 * 16 * 4 * 4
+
+    def test_allreduce_ring_link_bytes(self):
+        scaled = collective_bytes_scaled(self.HLO)
+        operand = 8 * 64 * 4
+        assert scaled.link_bytes_by_op["all-reduce"] == 12 * int(2 * operand * 7 / 8)
+
+
+class TestAnalyticAccounting:
+    @pytest.mark.parametrize("arch", ["granite-8b", "tinyllama-1.1b", "olmo-1b"])
+    def test_dense_train_flops_near_6nd(self, arch):
+        """Analytic cell FLOPs for dense archs ~ 6·N·D x remat factor."""
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        analytic = cell_flops(cfg, shape)
+        canonical = model_flops(cfg, shape)
+        # remat -> 8/6 x; attention quadratic adds more
+        assert 0.9 < analytic / canonical < 2.5, (arch, analytic / canonical)
+
+    def test_moe_counts_active_params_only(self):
+        cfg = get_config("granite-moe-1b-a400m")
+        dense_equiv = cfg.param_count()
+        active = cfg.active_param_count()
+        assert active < dense_equiv  # top-8 of 32 experts
+        assert model_flops(cfg, SHAPES["train_4k"]) == 6.0 * active * 4096 * 256
+
+    def test_decode_memory_floor_has_cache(self):
+        cfg = get_config("granite-8b")
+        floor = cell_hbm_floor_bytes(cfg, SHAPES["decode_32k"], 256, 16)
+        params_only = cfg.param_count() / 16 * 2
+        assert floor > 1.5 * params_only  # the 32k KV cache dominates
+
+    def test_subquadratic_decode_floor_tiny(self):
+        xl = get_config("xlstm-1.3b")
+        floor = cell_hbm_floor_bytes(xl, SHAPES["long_500k"], 256, 16)
+        # state-based decode: no 512k KV cache anywhere
+        assert floor < 1e9
+
+
+SCAN_CALIB = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    D, L, B = 256, 4, 8
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out.sum()
+    def unrolled(x, ws):
+        for i in range(L):
+            x = jnp.tanh(x @ ws[i])
+        return x.sum()
+    x = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    with jax.set_mesh(mesh):
+        fl = []
+        for fn in (scanned, unrolled):
+            c = jax.jit(fn, in_shardings=(P("data", None), P(None, None, "model"))).lower(x, ws).compile()
+            fl.append(c.cost_analysis()["flops"])
+    # scan body counted once: unrolled ~= L x scanned (matmul part)
+    assert fl[1] > 3.5 * fl[0], fl
+    print("SCAN-ONCE-CONFIRMED")
+    """
+)
+
+
+def test_cost_analysis_counts_scan_body_once():
+    """The calibration underpinning the §Roofline methodology."""
+    r = run_sub(SCAN_CALIB)
+    assert "SCAN-ONCE-CONFIRMED" in r.stdout, r.stderr[-2000:]
+
+
+DRYRUN_CELL = textwrap.dedent(
+    """
+    from repro.launch.dryrun import run_cell
+    r = run_cell("smollm-135m", "decode_32k", multi_pod=False, save=False)
+    assert r["n_chips"] == 256
+    assert r["cost"]["flops_per_device"] > 0
+    rf = r["roofline"]
+    assert rf["dominant_term"] in ("compute", "memory", "collective")
+    assert rf["bound_s"] > 0
+    r2 = run_cell("smollm-135m", "long_500k", multi_pod=False, save=False)
+    assert r2["skipped"]
+    print("CELL-OK", rf["dominant_term"])
+    """
+)
+
+
+def test_one_real_dryrun_cell_256_chips():
+    """Full lower+compile of a serve_step on the 16x16 production mesh."""
+    r = run_sub(DRYRUN_CELL)
+    assert "CELL-OK" in r.stdout, r.stderr[-3000:]
+
+
+MULTIPOD_CELL = textwrap.dedent(
+    """
+    from repro.launch.dryrun import run_cell
+    r = run_cell("smollm-135m", "decode_32k", multi_pod=True, save=False)
+    assert r["n_chips"] == 512 and r["mesh"].startswith("pod2x16x16")
+    print("MULTIPOD-OK")
+    """
+)
+
+
+def test_multipod_cell_512_chips():
+    r = run_sub(MULTIPOD_CELL)
+    assert "MULTIPOD-OK" in r.stdout, r.stderr[-3000:]
+
+
+def test_sweep_artifacts_complete():
+    """The committed sweep covers every (arch x shape x mesh) cell."""
+    d = os.path.join(REPO, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("sweep not run")
+    names = os.listdir(d)
+    from repro.configs import ARCH_IDS, applicable
+
+    missing = []
+    for arch in ARCH_IDS:
+        for shape_name, shape in SHAPES.items():
+            if not applicable(get_config(arch), shape):
+                continue
+            for mesh in ("pod16x16", "pod2x16x16"):
+                f = f"{arch}__{shape_name}__{mesh}.json"
+                if f not in names:
+                    missing.append(f)
+    assert not missing, missing[:5]

@@ -1,0 +1,191 @@
+"""GNN substrate tests: policy equivalence, phase order, models, datasets,
+and the device-level Parallel Pipeline (subprocess, 2 virtual devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.gnn import (
+    EllAdjacency,
+    GNNConfig,
+    POLICIES,
+    gnn_forward,
+    gnn_loss,
+    init_gnn,
+    make_node_classification_task,
+    multiphase_matmul,
+)
+from repro.graphs import TABLE4, from_edges, load_dataset
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    g, spec = load_dataset("mutag")
+    return g, spec
+
+
+class TestPolicyEquivalence:
+    """All inter-phase policies and both phase orders compute (A X) W."""
+
+    def test_policies_match_dense_reference(self, small_graph):
+        g, spec = small_graph
+        adj = EllAdjacency.from_csr(g)
+        x, _, _ = make_node_classification_task(g, spec.n_features, 4)
+        w = jax.random.normal(jax.random.PRNGKey(0), (spec.n_features, 16)) * 0.1
+        dense = jnp.asarray(g.to_dense())
+        ref = (dense @ x) @ w
+        for policy in ("seq", "sp_generic", "sp_opt"):
+            for order in ("AC", "CA"):
+                out = multiphase_matmul(adj, x, w, policy=policy, order=order)
+                np.testing.assert_allclose(
+                    np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4,
+                    err_msg=f"{policy}/{order}",
+                )
+
+    def test_band_size_does_not_change_result(self, small_graph):
+        g, spec = small_graph
+        adj = EllAdjacency.from_csr(g)
+        x, _, _ = make_node_classification_task(g, spec.n_features, 4)
+        w = jax.random.normal(jax.random.PRNGKey(0), (spec.n_features, 8)) * 0.1
+        outs = [
+            multiphase_matmul(adj, x, w, policy="sp_generic", band_size=b)
+            for b in (32, 128, 1024)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]), rtol=1e-5)
+
+    def test_invalid_policy_raises(self, small_graph):
+        g, spec = small_graph
+        adj = EllAdjacency.from_csr(g)
+        x = jnp.zeros((g.n_nodes, 4))
+        w = jnp.zeros((4, 4))
+        with pytest.raises(ValueError, match="policy"):
+            multiphase_matmul(adj, x, w, policy="bogus")
+
+
+class TestModels:
+    @pytest.mark.parametrize("kind", ["gcn", "sage", "gin"])
+    def test_forward_and_grads_finite(self, small_graph, kind):
+        g, spec = small_graph
+        adj = EllAdjacency.from_csr(g)
+        x, labels, mask = make_node_classification_task(g, spec.n_features, 4)
+        cfg = GNNConfig(kind=kind, f_in=spec.n_features, n_classes=4)
+        params = init_gnn(cfg, jax.random.PRNGKey(1))
+        logits = gnn_forward(cfg, params, adj, x)
+        assert logits.shape == (g.n_nodes, 4)
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_loss(cfg, p, adj, x, labels, mask)
+        )(params)
+        assert np.isfinite(float(loss))
+        for leaf in jax.tree_util.tree_leaves(grads):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_training_reduces_loss(self, small_graph):
+        g, spec = small_graph
+        adj = EllAdjacency.from_csr(g)
+        x, labels, mask = make_node_classification_task(g, spec.n_features, 4)
+        cfg = GNNConfig(kind="gcn", f_in=spec.n_features, n_classes=4)
+        params = init_gnn(cfg, jax.random.PRNGKey(1))
+
+        @jax.jit
+        def step(p):
+            l, g_ = jax.value_and_grad(
+                lambda q: gnn_loss(cfg, q, adj, x, labels, mask)
+            )(p)
+            return l, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, g_)
+
+        l0, params = step(params)
+        for _ in range(30):
+            l, params = step(params)
+        assert float(l) < float(l0)
+
+
+class TestDatasets:
+    @pytest.mark.parametrize("name", list(TABLE4))
+    def test_stats_near_table4(self, name):
+        g, spec = load_dataset(name)
+        g.validate()
+        expect_v = spec.avg_nodes * spec.n_graphs
+        assert 0.5 * expect_v <= g.n_nodes <= 2.0 * expect_v
+        # self-loops add V edges on top of ~2x undirected listing
+        raw_e = spec.avg_edges * spec.n_graphs
+        assert g.n_edges >= raw_e * 0.5
+        assert g.nnz.min() >= 1  # self loops guarantee no empty rows
+
+    def test_hf_datasets_have_skewed_degrees(self):
+        for name in ("reddit-bin", "citeseer", "cora"):
+            g, _ = load_dataset(name)
+            assert g.max_degree > 4 * g.avg_degree, name  # evil rows exist
+
+    def test_deterministic_given_seed(self):
+        a, _ = load_dataset("mutag", seed=7)
+        b, _ = load_dataset("mutag", seed=7)
+        assert np.array_equal(a.col_idx, b.col_idx)
+        c, _ = load_dataset("mutag", seed=8)
+        assert not np.array_equal(a.col_idx, c.col_idx)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    v=st.integers(4, 60),
+    extra=st.integers(0, 120),
+    f=st.integers(1, 32),
+    gdim=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_policies_agree_on_random_graphs(v, extra, f, gdim, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, size=extra)
+    dst = rng.integers(0, v, size=extra)
+    g = from_edges(v, src, dst)
+    adj = EllAdjacency.from_csr(g)
+    x = jnp.asarray(rng.normal(size=(v, f)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(f, gdim)).astype(np.float32))
+    ref = multiphase_matmul(adj, x, w, policy="seq", order="AC")
+    for policy, order in [("sp_generic", "AC"), ("sp_opt", "AC"), ("seq", "CA")]:
+        out = multiphase_matmul(adj, x, w, policy=policy, order=order, band_size=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-4)
+
+
+PP_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.gnn import EllAdjacency, multiphase_matmul
+    from repro.graphs import load_dataset
+
+    g, spec = load_dataset("mutag")
+    adj = EllAdjacency.from_csr(g)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(g.n_nodes, spec.n_features)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(spec.n_features, 16)).astype(np.float32))
+    mesh = jax.make_mesh((2,), ("phase",))
+    ref = multiphase_matmul(adj, x, w, policy="seq")
+    out = multiphase_matmul(adj, x, w, policy="pp", mesh=mesh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-4)
+    print("PP-OK")
+    """
+)
+
+
+def test_parallel_pipeline_two_device_groups():
+    """The paper's PP dataflow as producer/consumer device groups with a
+    collective_permute hand-off — run in a subprocess so the 2-device
+    override does not pollute this process's jax."""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", PP_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=300,
+    )
+    assert "PP-OK" in r.stdout, r.stderr[-2000:]

@@ -1,0 +1,202 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed in Pallas interpret mode (kernels target TPU; this container is
+CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import from_edges
+from repro.kernels.fused_agg_cmb import fused_agg_cmb, fused_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.gemm_dataflow import DATAFLOWS, gemm_ref
+from repro.kernels.gemm_dataflow.ops import gemm
+from repro.kernels.spmm import spmm, spmm_ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=np.float32, rng=RNG):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+class TestGemmDataflow:
+    @pytest.mark.parametrize("dataflow", DATAFLOWS)
+    @pytest.mark.parametrize(
+        "v,f,g", [(128, 128, 128), (96, 80, 72), (33, 17, 5), (256, 64, 512)]
+    )
+    def test_matches_oracle(self, dataflow, v, f, g):
+        x, w = rand((v, f)), rand((f, g))
+        out = gemm(x, w, dataflow=dataflow, block_v=32, block_g=32, block_f=32)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gemm_ref(x, w)), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = rand((64, 64)).astype(dtype)
+        w = rand((64, 64)).astype(dtype)
+        out = gemm(x, w, dataflow="output_stationary", block_v=32, block_g=32, block_f=32)
+        ref = gemm_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(ref, np.float32),
+            rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+            atol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        v=st.integers(1, 150),
+        f=st.integers(1, 150),
+        g=st.integers(1, 150),
+        df=st.sampled_from(DATAFLOWS),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_shapes(self, v, f, g, df, seed):
+        rng = np.random.default_rng(seed)
+        x, w = rand((v, f), rng=rng), rand((f, g), rng=rng)
+        out = gemm(x, w, dataflow=df, block_v=32, block_g=32, block_f=32)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gemm_ref(x, w)), rtol=2e-4, atol=2e-4
+        )
+
+
+def random_ell(v, max_deg, seed=0):
+    rng = np.random.default_rng(seed)
+    extra = rng.integers(0, v * max_deg // 2 + 1)
+    g = from_edges(v, rng.integers(0, v, extra), rng.integers(0, v, extra))
+    idx, wts, _ = g.to_ell()
+    return jnp.asarray(idx), jnp.asarray(wts)
+
+
+class TestSpmm:
+    @pytest.mark.parametrize("v,f,deg", [(64, 32, 4), (200, 96, 8), (17, 5, 3)])
+    def test_matches_oracle(self, v, f, deg):
+        idx, wts = random_ell(v, deg, seed=v)
+        x = rand((v, f))
+        out = spmm(idx, wts, x, block_v=32, block_f=32)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(spmm_ref(idx, wts, x)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_matches_dense_spmm(self):
+        g = from_edges(50, np.arange(49), np.arange(1, 50))
+        idx, wts, _ = g.to_ell()
+        x = rand((50, 24))
+        dense = jnp.asarray(g.to_dense())
+        out = spmm(jnp.asarray(idx), jnp.asarray(wts), x, block_v=16, block_f=8)
+        np.testing.assert_allclose(
+            np.asarray(out[:50]), np.asarray(dense @ x), rtol=1e-4, atol=1e-5
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        v=st.integers(2, 120),
+        f=st.integers(1, 80),
+        deg=st.integers(1, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property(self, v, f, deg, seed):
+        idx, wts = random_ell(v, deg, seed=seed)
+        rng = np.random.default_rng(seed)
+        x = rand((v, f), rng=rng)
+        out = spmm(idx, wts, x, block_v=32, block_f=32)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(spmm_ref(idx, wts, x)), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestFusedAggCmb:
+    """The SP-Optimized kernel: fused == aggregate-then-GEMM."""
+
+    @pytest.mark.parametrize("v,f,g,deg", [(64, 32, 16, 4), (130, 48, 8, 6)])
+    def test_matches_oracle(self, v, f, g, deg):
+        idx, wts = random_ell(v, deg, seed=v)
+        x, w = rand((v, f)), rand((f, g))
+        out = fused_agg_cmb(idx, wts, x, w, band_size=32)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(fused_ref(idx, wts, x, w)), rtol=1e-4, atol=1e-4
+        )
+
+    def test_fused_equals_two_phase(self):
+        v, f, g, deg = 96, 40, 12, 5
+        idx, wts = random_ell(v, deg, seed=1)
+        x, w = rand((v, f)), rand((f, g))
+        fused = fused_agg_cmb(idx, wts, x, w, band_size=32)
+        seq = spmm(idx, wts, x, block_v=32, block_f=32) @ w
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(seq), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        v=st.integers(4, 100),
+        f=st.integers(1, 64),
+        g=st.integers(1, 32),
+        deg=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property(self, v, f, g, deg, seed):
+        idx, wts = random_ell(v, deg, seed=seed)
+        rng = np.random.default_rng(seed)
+        x, w = rand((v, f), rng=rng), rand((f, g), rng=rng)
+        out = fused_agg_cmb(idx, wts, x, w, band_size=16)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(fused_ref(idx, wts, x, w)), rtol=2e-4, atol=2e-4
+        )
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [False, True])
+    @pytest.mark.parametrize(
+        "b,hq,hkv,sq,sk,d",
+        [(2, 4, 2, 96, 96, 32), (1, 8, 1, 64, 128, 16), (2, 2, 2, 33, 33, 64)],
+    )
+    def test_matches_oracle(self, b, hq, hkv, sq, sk, d, causal):
+        q = rand((b, hq, sq, d))
+        k = rand((b, hkv, sk, d))
+        v = rand((b, hkv, sk, d))
+        out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+        rep = hq // hkv
+        kr = jnp.repeat(k, rep, axis=1).reshape(b * hq, sk, d)
+        vr = jnp.repeat(v, rep, axis=1).reshape(b * hq, sk, d)
+        ref = attention_ref(q.reshape(b * hq, sq, d), kr, vr, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(b * hq, sq, d), np.asarray(ref), rtol=2e-4, atol=2e-5
+        )
+
+    def test_bf16(self):
+        q = rand((1, 2, 64, 32)).astype(jnp.bfloat16)
+        k = rand((1, 2, 64, 32)).astype(jnp.bfloat16)
+        v = rand((1, 2, 64, 32)).astype(jnp.bfloat16)
+        out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        ref = attention_ref(
+            q.reshape(2, 64, 32), k.reshape(2, 64, 32), v.reshape(2, 64, 32), causal=True
+        )
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32).reshape(2, 64, 32),
+            np.asarray(ref, np.float32),
+            rtol=5e-2,
+            atol=5e-2,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        sq=st.integers(1, 120),
+        sk=st.integers(1, 120),
+        d=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property(self, sq, sk, d, causal, seed):
+        rng = np.random.default_rng(seed)
+        q = rand((1, 2, sq, d), rng=rng)
+        k = rand((1, 2, sk, d), rng=rng)
+        v = rand((1, 2, sk, d), rng=rng)
+        out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+        ref = attention_ref(
+            q.reshape(2, sq, d), k.reshape(2, sk, d), v.reshape(2, sk, d), causal=causal
+        )
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(2, sq, d), np.asarray(ref), rtol=3e-4, atol=3e-5
+        )

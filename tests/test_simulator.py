@@ -1,0 +1,220 @@
+"""Inter-phase simulator tests: Table 3 semantics + paper claims + property
+tests over random workloads."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AcceleratorConfig,
+    GNNDataflow,
+    GNNLayerWorkload,
+    InterPhase,
+    PhaseOrder,
+    intra,
+    named_dataflow,
+    named_skeleton,
+    optimize_tiles,
+    simulate,
+)
+from repro.graphs import load_dataset
+
+HW = AcceleratorConfig()
+RNG = np.random.default_rng(0)
+
+
+def wl_random(v=256, f=64, g=16, max_deg=8, rng=RNG):
+    nnz = rng.integers(1, max_deg + 1, size=v)
+    return GNNLayerWorkload(nnz, f, g)
+
+
+def df_seq(**tiles):
+    return named_dataflow("Seq-Nt", **tiles)
+
+
+class TestInterPhaseSemantics:
+    wl = wl_random()
+
+    def test_seq_is_sum_of_phases_plus_transfer(self):
+        df = df_seq(T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_G=8, T_F_CMB=8)
+        s = simulate(df, self.wl, HW)
+        assert s.cycles >= s.agg_cycles + s.cmb_cycles
+        # intermediate transfer is serialized at the phase boundary
+        t_xfer = 2 * self.wl.v * self.wl.f_in / HW.gb_bandwidth
+        assert s.cycles == pytest.approx(s.agg_cycles + s.cmb_cycles + t_xfer, rel=0.3)
+
+    def test_sp_optimized_saves_transfer_and_int_traffic(self):
+        # cmb tiles with T_G = G so the intermediate is read exactly once
+        seq = simulate(
+            df_seq(T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_G=16, T_F_CMB=4),
+            self.wl,
+            HW,
+        )
+        spo = simulate(
+            named_dataflow("EnGN", T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_F_CMB=16),
+            self.wl,
+            HW,
+        )
+        assert "int" not in spo.gb_accesses
+        assert seq.gb_accesses["int"] == 2 * self.wl.v * self.wl.f_in
+
+    def test_pp_uses_pingpong_buffer_energy(self):
+        df = named_dataflow("HyGCN", T_F_AGG=16, T_V_CMB=8, T_G=8)
+        s = simulate(df, self.wl, HW)
+        seq = simulate(df_seq(T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_G=8), self.wl, HW)
+        # same int access count, cheaper per access (small ping-pong buffer)
+        assert s.gb_accesses["int"] == seq.gb_accesses["int"]
+        assert s.energy_breakdown["gb_int"] < seq.energy_breakdown["gb_int"]
+
+    def test_pp_pipeline_shorter_than_sum_on_balanced_load(self):
+        df = named_dataflow("HyGCN", T_F_AGG=16, T_V_CMB=4, T_G=16, T_F_CMB=4)
+        s = simulate(df, self.wl, HW)
+        # pipelining overlaps the phases: total < serialized phase times
+        assert s.cycles < s.agg_cycles + s.cmb_cycles
+
+    def test_macs_identical_across_dataflows(self):
+        flows = [
+            df_seq(T_V_AGG=8, T_F_AGG=16),
+            named_dataflow("EnGN", T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_F_CMB=16),
+            named_dataflow("HyGCN", T_F_AGG=16, T_V_CMB=8, T_G=8),
+        ]
+        macs = {simulate(d, self.wl, HW).macs for d in flows}
+        assert len(macs) == 1
+
+    def test_ca_order_changes_agg_macs(self):
+        wl = wl_random(f=64, g=16)
+        ac = simulate(df_seq(T_V_AGG=8, T_F_AGG=16), wl, HW)
+        ca = simulate(
+            named_dataflow("AWB-GCN", T_F_AGG=8, T_V_AGG=16, T_V_CMB=16), wl, HW
+        )
+        agg_ac, cmb = wl.macs(PhaseOrder.AC)
+        agg_ca, _ = wl.macs(PhaseOrder.CA)
+        assert ac.macs == agg_ac + cmb
+        assert ca.macs == agg_ca + cmb
+        assert agg_ca < agg_ac  # G < F: combination-first shrinks aggregation
+
+
+class TestPaperClaims:
+    """Qualitative claims from Sec. 5.2 / 5.3, on the paper's datasets."""
+
+    @pytest.fixture(scope="class")
+    def citeseer(self):
+        g, spec = load_dataset("citeseer")
+        return GNNLayerWorkload(g.nnz, spec.n_features, 16, name="citeseer")
+
+    @pytest.fixture(scope="class")
+    def collab(self):
+        g, spec = load_dataset("collab")
+        return GNNLayerWorkload(g.nnz, spec.n_features, 16, name="collab")
+
+    def test_high_vs_sp_pays_psum_and_runtime(self, citeseer):
+        """Sec 5.4: the rigid T_F=T_N=1 mapping has huge runtime + psum
+        energy — the case for configurable tile sizes."""
+        best = optimize_tiles(named_skeleton("SP-FsNt-Fs"), citeseer, HW, "cycles")
+        rigid = optimize_tiles(named_skeleton("High-Vs-SP"), citeseer, HW, "cycles")
+        assert rigid.stats.cycles > 1.5 * best.stats.cycles
+        assert rigid.stats.energy_pj > 1.5 * best.stats.energy_pj
+        assert rigid.stats.gb_accesses.get("psum", 0) > 0
+
+    def test_pp_load_imbalance_on_dense_graphs(self, collab):
+        """Sec 5.2.1: Collab PP is worse than Seq (agg/cmb imbalance)."""
+        seq = optimize_tiles(named_skeleton("Seq-Nt"), collab, HW, "cycles")
+        pp = optimize_tiles(
+            named_skeleton("PP-Nt-Vt/sl"), collab, HW, "cycles", pe_splits=(0.5,)
+        )
+        assert pp.stats.cycles > seq.stats.cycles
+
+    def test_pe_allocation_matches_phase_balance(self, collab, citeseer):
+        """Fig 12: agg-heavy Collab suffers at 25-75; cmb-heavy Citeseer
+        suffers at 75-25."""
+        def t(wl, split):
+            return optimize_tiles(
+                named_skeleton("PP-Nt-Vt/sl"), wl, HW, "cycles", pe_splits=(split,)
+            ).stats.cycles
+
+        assert t(collab, 0.25) > 1.5 * t(collab, 0.75)
+        assert t(citeseer, 0.75) > 1.5 * t(citeseer, 0.25)
+
+    def test_pp_suffers_most_at_low_bandwidth(self, citeseer):
+        """Fig 13: with tiles fixed, PP degrades more than Seq when GB
+        bandwidth shrinks (phases share the bandwidth)."""
+        def degrade(name):
+            res = optimize_tiles(named_skeleton(name), citeseer, HW, "cycles",
+                                 pe_splits=(0.5,))
+            lo = simulate(res.dataflow, citeseer, AcceleratorConfig(gb_bandwidth=64))
+            return lo.cycles / res.stats.cycles
+
+        assert degrade("PP-Nt-Vt/sl") > degrade("Seq-Nt")
+
+    def test_evil_rows_punish_high_tv(self):
+        """Sec 5.2.1: one dense row stalls high-T_V SP dataflows."""
+        nnz = np.full(4096, 2)
+        nnz[7] = 2048  # the evil row
+        wl = GNNLayerWorkload(nnz, 256, 16)
+        even = GNNLayerWorkload(np.full(4096, 2), 256, 16)
+        hi = named_skeleton("High-Vs-SP")
+        slow = optimize_tiles(hi, wl, HW, "cycles").stats.cycles
+        fast = optimize_tiles(hi, even, HW, "cycles").stats.cycles
+        assert slow > 5 * fast
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+tile_pow2 = st.sampled_from([1, 2, 4, 8, 16])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    v=st.integers(4, 300),
+    f=st.integers(1, 200),
+    g=st.integers(1, 64),
+    max_deg=st.integers(1, 40),
+    tv=tile_pow2,
+    tf=tile_pow2,
+    tg=tile_pow2,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_simulation_invariants(v, f, g, max_deg, tv, tf, tg, seed):
+    from hypothesis import assume
+
+    assume(tv * tf * tg <= HW.n_pes)  # combination footprint must fit
+    rng = np.random.default_rng(seed)
+    wl = GNNLayerWorkload(rng.integers(1, max_deg + 1, size=v), f, g)
+    flows = [
+        named_dataflow("Seq-Nt", T_V_AGG=tv, T_F_AGG=tf, T_V_CMB=tv, T_G=tg, T_F_CMB=tf),
+        named_dataflow("EnGN", T_V_AGG=tv, T_F_AGG=tf, T_V_CMB=tv, T_F_CMB=tf),
+        named_dataflow("HyGCN", T_F_AGG=tf, T_V_CMB=tv, T_G=tg),
+        named_dataflow("AWB-GCN", T_F_AGG=tf, T_V_AGG=tv, T_V_CMB=tv),
+    ]
+    stats = [simulate(d, wl, HW) for d in flows]
+    agg_m, cmb_m = wl.macs(PhaseOrder.AC)
+    for d, s in zip(flows, stats):
+        assert s.cycles > 0 and np.isfinite(s.cycles)
+        assert s.energy_pj > 0 and np.isfinite(s.energy_pj)
+        assert 0 <= s.pe_utilization <= 1
+        assert s.stall_factor >= 0.99
+        assert s.buffering_elems >= 0
+        # work conservation: the dataflow never changes the MAC count
+        if d.order == PhaseOrder.AC:
+            assert s.macs == agg_m + cmb_m
+        # a single PE-cycle can do at most one MAC
+        assert s.macs <= s.cycles * HW.n_pes * s.stall_factor + 1e-6
+    # Seq pays at least the intermediate through the GB; SP-opt never does
+    assert stats[0].gb_accesses["int"] >= 2 * v * f
+    assert "int" not in stats[1].gb_accesses
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    v=st.integers(32, 400),
+    f=st.integers(8, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mapper_finds_legal_mappings(v, f, seed):
+    rng = np.random.default_rng(seed)
+    wl = GNNLayerWorkload(rng.integers(1, 9, size=v), f, 16)
+    for name in ("Seq-Nt", "SP-FsNt-Fs", "PP-Nt-Vt/sl"):
+        res = optimize_tiles(named_skeleton(name), wl, HW, "edp")
+        res.dataflow.validate()
+        assert res.stats.cycles > 0

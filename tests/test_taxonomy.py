@@ -1,0 +1,156 @@
+"""Tests for the dataflow taxonomy (paper Tables 1-2, Sec. 3)."""
+import pytest
+
+from repro.core import (
+    Binding,
+    GNNDataflow,
+    Granularity,
+    InterPhase,
+    PhaseOrder,
+    enumerate_dataflows,
+    intra,
+    named_dataflow,
+    named_skeleton,
+)
+from repro.core.taxonomy import SKELETONS, classify_granularity
+
+
+class TestEnumeration:
+    def test_total_is_6656(self):
+        """The paper counts 6,656 loop-order x parallelism x phase-order
+        choices across the three inter-phase classes (Sec. 3.3)."""
+        dfs = enumerate_dataflows()
+        assert len(dfs) == 6656
+
+    def test_class_counts(self):
+        dfs = enumerate_dataflows()
+        by = {}
+        for d in dfs:
+            by[d.inter] = by.get(d.inter, 0) + 1
+        assert by[InterPhase.SEQ] == 48 * 48 * 2
+        assert by[InterPhase.SP] == 1024
+        assert by[InterPhase.PP] == 1024
+
+    def test_sp_and_pp_all_pipelineable(self):
+        for d in enumerate_dataflows():
+            if d.inter in (InterPhase.SP, InterPhase.PP):
+                assert d.granularity != Granularity.NONE
+
+    def test_sp_optimized_is_subset_of_sp(self):
+        spopt = [d for d in enumerate_dataflows() if d.is_sp_optimized]
+        assert spopt and all(d.inter == InterPhase.SP for d in spopt)
+        # {VF}N_t / {VF}G_t x 2 orders x (V,F bindings)^2 x 2 phase orders
+        assert len(spopt) == 64
+
+
+class TestGranularity:
+    """Table 2 rows 4-9 loop-order patterns."""
+
+    @pytest.mark.parametrize(
+        "agg,cmb,expected",
+        [
+            # row 4: element(s) wise, AC
+            ("VFN", "VFG", "element"),
+            ("FVN", "FVG", "element"),
+            # row 5: row(s) wise (not the element pair)
+            ("VNF", "VGF", "row"),
+            ("VFN", "VGF", "row"),
+            ("VNF", "VFG", "row"),
+            # row 6: column(s) wise
+            ("FNV", "FGV", "column"),
+            ("FVN", "FGV", "column"),
+            ("FNV", "FVG", "column"),
+            # infeasible pairs
+            ("NVF", "VFG", "none"),
+            ("VFN", "GVF", "none"),
+            ("FVN", "VGF", "none"),
+        ],
+    )
+    def test_ac_patterns(self, agg, cmb, expected):
+        g = classify_granularity(PhaseOrder.AC, tuple(agg), tuple(cmb))
+        assert g.value == expected
+
+    @pytest.mark.parametrize(
+        "agg,cmb,expected",
+        [
+            # row 7: element(s) wise CA — (NFV, VGF) or (FNV, GVF)
+            ("NFV", "VGF", "element"),
+            ("FNV", "GVF", "element"),
+            # row 8: row(s) wise CA (cmb V outer, agg N outer)
+            ("NVF", "VGF", "row"),
+            ("NFV", "VFG", "row"),
+            # row 9: column(s) wise CA (cmb G outer, agg F outer)
+            ("FVN", "GVF", "column"),
+            ("FNV", "GFV", "column"),
+            # infeasible
+            ("VFN", "VGF", "none"),
+        ],
+    )
+    def test_ca_patterns(self, agg, cmb, expected):
+        g = classify_granularity(PhaseOrder.CA, tuple(agg), tuple(cmb))
+        assert g.value == expected
+
+
+class TestLegality:
+    def test_sp_requires_pipelineable_orders(self):
+        df = GNNDataflow(
+            InterPhase.SP,
+            PhaseOrder.AC,
+            intra("NtVtFt", "agg"),
+            intra("VtGtFt", "cmb"),
+        )
+        with pytest.raises(ValueError, match="not pipelineable"):
+            df.validate()
+
+    def test_footprint_checked_against_pes(self):
+        df = named_dataflow("EnGN", T_V_AGG=64, T_F_AGG=64, T_V_CMB=64, T_F_CMB=64)
+        with pytest.raises(ValueError, match="exceeds PE budget"):
+            df.validate(n_pes=512)
+        df.validate(n_pes=4096)
+
+    def test_temporal_loop_rejects_tile(self):
+        with pytest.raises(ValueError, match="temporal loop"):
+            from repro.core.taxonomy import Loop
+
+            Loop("V", Binding.TEMPORAL, 4)
+
+    def test_pp_split_range(self):
+        with pytest.raises(ValueError, match="pe_split"):
+            GNNDataflow(
+                InterPhase.PP,
+                PhaseOrder.AC,
+                intra("VtFtNt", "agg"),
+                intra("VtGtFt", "cmb"),
+                pe_split=0.0,
+            )
+
+
+class TestNamed:
+    def test_hygcn_matches_paper(self):
+        """HyGCN = PP_AC(VxFsNt, VsGsFt) (paper Sec. 3.3 / Table 2 row 5)."""
+        df = named_dataflow("HyGCN", T_F_AGG=16, T_V_CMB=8, T_G=16)
+        assert df.inter == InterPhase.PP and df.order == PhaseOrder.AC
+        assert df.agg.binding("N") == Binding.TEMPORAL
+        assert df.cmb.binding("F") == Binding.TEMPORAL
+        assert df.granularity == Granularity.ROW
+
+    def test_awb_gcn_matches_paper(self):
+        """AWB-GCN = PP_CA(FsNtVs, GtFtVs) (Table 2 row 9)."""
+        df = named_dataflow("AWB-GCN", T_F_AGG=16, T_V_AGG=8, T_V_CMB=8)
+        assert df.inter == InterPhase.PP and df.order == PhaseOrder.CA
+        assert df.granularity == Granularity.COLUMN
+
+    def test_engn_is_sp_optimized(self):
+        df = named_dataflow("EnGN", T_V_AGG=8, T_F_AGG=8, T_V_CMB=8, T_F_CMB=8)
+        assert df.is_sp_optimized
+
+    def test_all_skeletons_concretize(self):
+        for name, sk in SKELETONS.items():
+            df = sk.concretize({"V": 2, "N": 1, "F": 2}, {"V": 2, "G": 2, "F": 2})
+            df.validate(n_pes=512)
+            assert isinstance(str(df), str)
+
+    def test_skeleton_sp_opt_flags(self):
+        assert named_skeleton("SP-FsNt-Fs").sp_optimized
+        assert named_skeleton("High-Vs-SP").sp_optimized
+        assert not named_skeleton("PP-Nt-Vsh").sp_optimized

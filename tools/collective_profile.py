@@ -1,0 +1,52 @@
+"""Rank collectives in a dry-run cell by execution-weighted link bytes,
+with the originating jax op (metadata op_name) — the dry-run 'profiler'."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+
+from repro.launch.dryrun import build_step
+from repro.launch.hlo import _split_computations, execution_counts, _OP_RE, _GROUP_RE, shape_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.configs import SHAPES, get_config
+from repro.models import production_rules, use_sharding
+from repro.models.sharding import tuned_rules
+import jax
+
+def profile(arch, shape_name, top=18, tuned=False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = tuned_rules(arch) if tuned else production_rules()
+    with use_sharding(mesh, rules):
+        fn, args, shardings, donate = build_step(cfg, shape, mesh, rules)
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(fn, in_shardings=shardings,
+                               donate_argnums=donate or None).lower(*args).compile()
+    hlo = compiled.as_text()
+    comps = _split_computations(hlo)
+    mult = execution_counts(hlo)
+    entries = []
+    for comp, lines in comps.items():
+        m_c = mult.get(comp, 1)
+        for line in lines:
+            if "-done(" in line:
+                continue
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            op = m.group("op")
+            result = shape_bytes(m.group("result"))
+            gm = _GROUP_RE.search(line)
+            p = int(gm.group(2)) if gm else 1
+            name = re.search(r'op_name="([^"]+)"', line)
+            nm = name.group(1) if name else "?"
+            shp = re.search(r"=\s+(\S+)", line)
+            entries.append((result * m_c, op, p, m_c, shp.group(1) if shp else "?", nm[-110:]))
+    entries.sort(reverse=True)
+    print(f"== {arch} x {shape_name}: top collectives by executed result bytes ==")
+    for b, op, p, m_c, shp, nm in entries[:top]:
+        print(f"{b/1e9:9.2f}GB x{m_c:5d} P={p:3d} {op:18s} {shp:28s} {nm}")
+
+if __name__ == "__main__":
+    profile(sys.argv[1], sys.argv[2], tuned=("--tuned" in sys.argv))
