@@ -2,7 +2,7 @@
 Table-5 dataflows across datasets (same runtime-optimal mappings as Fig 9)."""
 from __future__ import annotations
 
-from repro.core import TABLE5_NAMES, named_skeleton, optimize_tiles
+from repro.core import TABLE5_NAMES, TileStats, named_skeleton, optimize_tiles
 
 from .common import emit, save_json, timed, workloads
 
@@ -14,11 +14,12 @@ def run(datasets=None):
     for name, spec, wl in workloads(datasets):
         base = None
         table[name] = {}
+        ts = TileStats(wl.nnz)
         for sk in TABLE5_NAMES:
             try:
                 res, us = timed(
                     optimize_tiles, named_skeleton(sk), wl,
-                    objective="cycles", pe_splits=SPLITS,
+                    objective="cycles", pe_splits=SPLITS, tile_stats=ts,
                 )
             except (RuntimeError, ValueError):
                 continue

@@ -2,7 +2,7 @@
 (load balancing across the aggregation/combination engines)."""
 from __future__ import annotations
 
-from repro.core import named_skeleton, optimize_tiles
+from repro.core import TileStats, named_skeleton, optimize_tiles
 
 from .common import emit, save_json, timed, workloads
 
@@ -14,10 +14,11 @@ def run():
     for name, spec, wl in workloads(DATASETS):
         table[name] = {}
         base = None
+        ts = TileStats(wl.nnz)
         for split in (0.25, 0.5, 0.75):
             res, us = timed(
                 optimize_tiles, named_skeleton("PP-Nt-Vt/sl"), wl,
-                objective="cycles", pe_splits=(split,),
+                objective="cycles", pe_splits=(split,), tile_stats=ts,
             )
             cyc = res.stats.cycles
             if split == 0.5:

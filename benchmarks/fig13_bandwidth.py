@@ -3,7 +3,13 @@ elements-per-cycle), tiles FIXED at the bw=512 optimum — PP suffers most
 because both phases share the bandwidth."""
 from __future__ import annotations
 
-from repro.core import AcceleratorConfig, named_skeleton, optimize_tiles, simulate
+from repro.core import (
+    AcceleratorConfig,
+    TileStats,
+    named_skeleton,
+    optimize_tiles,
+    simulate,
+)
 
 from .common import emit, save_json, timed, workloads
 
@@ -14,10 +20,11 @@ def run():
     rows, table = [], {}
     for name, spec, wl in workloads(["citeseer", "collab"]):
         table[name] = {}
+        ts = TileStats(wl.nnz)
         for sk in FLOWS:
             res = optimize_tiles(
                 named_skeleton(sk), wl, AcceleratorConfig(gb_bandwidth=512),
-                objective="cycles", pe_splits=(0.5,),
+                objective="cycles", pe_splits=(0.5,), tile_stats=ts,
             )
             ref = None
             series = {}

@@ -1,0 +1,116 @@
+"""Mapper search latency: `search_dataflows` over synthetic Poisson graphs
+(small/medium/large) plus the Table 4 datasets.
+
+This is the regression guard for the batched, cache-backed search engine:
+the `large` case (50k vertices, Poisson(8) degrees, f_in=128, g_out=16) took
+~52s per sweep with the scalar per-candidate loop and must stay <= 2.5s with
+the batch engine (>= 20x).  Pass ``--with-baseline`` to also time the scalar
+reference engine and report the measured speedup (slow: re-runs the legacy
+O(V)-per-candidate path).
+
+    PYTHONPATH=src python -m benchmarks.mapper_search [--with-baseline]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GNNLayerWorkload, TABLE5_NAMES, TileStats, named_skeleton
+from repro.core.mapper import optimize_tiles, search_dataflows
+
+from .common import emit, save_json, timed, workloads
+
+#: v, mean degree, f_in, g_out for the synthetic Poisson cases.
+SYNTH_CASES = {
+    "synth-small": (5_000, 8, 128, 16),
+    "synth-medium": (20_000, 8, 128, 16),
+    "synth-large": (50_000, 8, 128, 16),
+}
+
+#: Threshold (us) the large synthetic sweep must stay under (>= 20x the
+#: ~52.6s scalar baseline recorded in README.md).
+LARGE_BUDGET_US = 2.5e6
+
+PE_SPLITS = (0.25, 0.5, 0.75)
+
+
+def synth_workload(name: str) -> GNNLayerWorkload:
+    v, deg, f_in, g_out = SYNTH_CASES[name]
+    rng = np.random.default_rng(0)
+    nnz = np.maximum(1, rng.poisson(deg, size=v))
+    return GNNLayerWorkload(nnz, f_in, g_out, name=name)
+
+
+def _scalar_sweep(wl: GNNLayerWorkload) -> None:
+    """The pre-batch search: one scalar simulate() per candidate."""
+    for sk in TABLE5_NAMES:
+        try:
+            optimize_tiles(
+                named_skeleton(sk), wl, objective="edp", pe_splits=PE_SPLITS,
+                engine="scalar",
+            )
+        except (RuntimeError, ValueError):
+            continue
+
+
+def run(cases: list[str] | None = None, with_baseline: bool = False):
+    rows, table = [], {}
+    if cases is None:
+        synth_names = list(SYNTH_CASES)
+        dataset_names = None  # all of Table 4
+    else:
+        synth_names = [c for c in cases if c in SYNTH_CASES]
+        dataset_names = [c for c in cases if c not in SYNTH_CASES]
+
+    wls = [(n, synth_workload(n)) for n in synth_names]
+    if dataset_names is None or dataset_names:
+        wls += [(n, wl) for n, _, wl in workloads(dataset_names)]
+
+    for name, wl in wls:
+        res, us = timed(search_dataflows, wl, objective="edp", pe_splits=PE_SPLITS)
+        best = res[0]
+        entry = {
+            "v": wl.v,
+            "e": wl.e,
+            "batch_us": us,
+            "results": len(res),
+            "best": best.skeleton,
+            "best_cycles": best.stats.cycles,
+        }
+        derived = f"v={wl.v};best={best.skeleton};cycles={best.stats.cycles:.0f}"
+        if with_baseline:
+            _, base_us = timed(_scalar_sweep, wl)
+            entry["scalar_us"] = base_us
+            entry["speedup"] = base_us / us
+            derived += f";speedup={base_us / us:.1f}x"
+        table[name] = entry
+        rows.append((f"mapper/{name}", us, derived))
+        if name == "synth-large":
+            ok = us <= LARGE_BUDGET_US
+            rows.append(
+                (f"mapper/{name}/budget", us,
+                 f"budget_us={LARGE_BUDGET_US:.0f};ok={ok}")
+            )
+    save_json("mapper_search", table)
+    slow = table.get("synth-large", {}).get("batch_us", 0.0)
+    if slow > LARGE_BUDGET_US:
+        raise RuntimeError(
+            f"mapper search regression: {slow:.0f}us > {LARGE_BUDGET_US:.0f}us"
+        )
+    return rows
+
+
+def main(argv: list[str] | None = None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--with-baseline", action="store_true",
+                    help="also time the scalar reference engine (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated case subset (synth-* or dataset names)")
+    args = ap.parse_args(argv)
+    cases = args.only.split(",") if args.only else None
+    emit(run(cases, with_baseline=args.with_baseline))
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ from . import (
     fig11_gb_breakdown,
     fig12_pe_allocation,
     fig13_bandwidth,
+    mapper_search,
     table3_validation,
     roofline,
 )
@@ -27,11 +28,13 @@ MODULES = {
     "fig11": fig11_gb_breakdown,
     "fig12": fig12_pe_allocation,
     "fig13": fig13_bandwidth,
+    "mapper": mapper_search,
     "table3": table3_validation,
     "roofline": roofline,
 }
 
 FAST_DATASETS = ["mutag", "collab", "citeseer"]
+FAST_MAPPER_CASES = ["synth-small", "mutag", "citeseer"]
 
 
 def main() -> int:
@@ -47,6 +50,8 @@ def main() -> int:
         t0 = time.time()
         if n in ("fig9", "fig10") and args.fast:
             rows = mod.run(FAST_DATASETS)
+        elif n == "mapper" and args.fast:
+            rows = mod.run(FAST_MAPPER_CASES)
         else:
             rows = mod.run()
         emit(rows)

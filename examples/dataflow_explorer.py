@@ -4,7 +4,13 @@ one table), plus the mapper's per-dataset winner.
 
     PYTHONPATH=src python examples/dataflow_explorer.py
 """
-from repro.core import GNNLayerWorkload, TABLE5_NAMES, named_skeleton, optimize_tiles
+from repro.core import (
+    GNNLayerWorkload,
+    TABLE5_NAMES,
+    TileStats,
+    named_skeleton,
+    optimize_tiles,
+)
 from repro.graphs import TABLE4, load_dataset
 
 G_HIDDEN = 16
@@ -13,13 +19,14 @@ print(f"{'dataset':12s} {'cat':4s} | " + " ".join(f"{n:>12s}" for n in TABLE5_NA
 for name in TABLE4:
     g, spec = load_dataset(name)
     wl = GNNLayerWorkload(g.nnz, spec.n_features, G_HIDDEN, name=name)
+    ts = TileStats(wl.nnz)  # tile ladder shared by all skeleton searches
     base = None
     cells = []
     best = (None, float("inf"))
     for sk in TABLE5_NAMES:
         try:
             r = optimize_tiles(named_skeleton(sk), wl, objective="cycles",
-                               pe_splits=(0.25, 0.5, 0.75))
+                               pe_splits=(0.25, 0.5, 0.75), tile_stats=ts)
             c = r.stats.cycles
             base = base or c
             cells.append(f"{c / base:12.2f}")

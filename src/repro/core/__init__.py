@@ -12,13 +12,21 @@ from .taxonomy import (
 )
 from .hw import AcceleratorConfig, TPUChipConfig, DEFAULT_ACCEL, TPU_V5E
 from .cost_model import (
+    BandStats,
     GNNLayerWorkload,
     PhaseCost,
+    TileStats,
     aggregation_cost,
     combination_cost,
     pipelined_elements,
     table3_buffering,
 )
-from .simulator import RunStats, simulate, simulate_model
-from .mapper import MappingResult, TABLE5_NAMES, optimize_tiles, search_dataflows
+from .simulator import BatchStats, RunStats, simulate, simulate_batch, simulate_model
+from .mapper import (
+    MappingResult,
+    TABLE5_NAMES,
+    optimize_tiles,
+    optimize_tiles_topk,
+    search_dataflows,
+)
 from .taxonomy import DataflowSkeleton, SkeletonPhase, Cons, named_skeleton, SKELETONS

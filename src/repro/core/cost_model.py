@@ -85,6 +85,136 @@ def _ceil(a, b):
     return -(-a // b) if isinstance(a, (int, np.integer)) else np.ceil(a / b)
 
 
+@dataclass
+class BandStats:
+    """Per-chunk producer-side trip counts for one PP chunking of a workload.
+
+    ``band`` holds the sum of aggregation N-trips inside each pipeline chunk
+    (a band of consecutive vertex tiles).  The sorted copy + prefix sums let
+    the batch engine evaluate ``sum(max(alpha * band, gamma))`` — the
+    two-stage-pipeline overlap term — in O(log n_chunks) per candidate via
+    ``searchsorted`` instead of O(n_chunks).
+    """
+
+    band: np.ndarray  # (n_chunks,) float64 per-chunk ntrip sums
+    sorted_all: np.ndarray  # band sorted ascending
+    prefix_all: np.ndarray  # (n_chunks + 1,) cumulative sums of sorted_all
+    sorted_tail: np.ndarray  # band[1:] sorted ascending
+    prefix_tail: np.ndarray  # (n_chunks,) cumulative sums of sorted_tail
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.band)
+
+    @property
+    def first(self) -> float:
+        return float(self.band[0])
+
+    @property
+    def total(self) -> float:
+        return float(self.prefix_all[-1])
+
+    def sum_max_all(self, alpha: np.ndarray, gamma: np.ndarray) -> np.ndarray:
+        """Vectorized ``sum_j max(alpha * band_j, gamma)`` over all chunks."""
+        return self._sum_max(self.sorted_all, self.prefix_all, alpha, gamma)
+
+    def sum_max_tail(self, alpha: np.ndarray, gamma: np.ndarray) -> np.ndarray:
+        """Vectorized ``sum_{j>=1} max(alpha * band_j, gamma)``."""
+        return self._sum_max(self.sorted_tail, self.prefix_tail, alpha, gamma)
+
+    @staticmethod
+    def _sum_max(srt, prefix, alpha, gamma):
+        alpha = np.asarray(alpha, dtype=np.float64)
+        gamma = np.asarray(gamma, dtype=np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            thr = np.where(alpha > 0, gamma / np.maximum(alpha, 1e-300), np.inf)
+        k = np.searchsorted(srt, thr, side="right")
+        total = prefix[-1]
+        return alpha * (total - prefix[k]) + gamma * k
+
+
+class TileStats:
+    """Per-workload memo of every tile-derived quantity the cost model and
+    simulator need, so a mapper sweep never redoes O(V) numpy work per
+    candidate.
+
+    ``tile_max(t_v)`` — the per-vertex-tile max nnz array — is built by
+    hierarchical doubling: ``tile_max(2k)`` is the pairwise max of
+    consecutive entries of ``tile_max(k)`` (tile boundaries are consecutive,
+    so halves always align; zero-padding is harmless under ``max``).  The
+    whole power-of-two ladder therefore costs O(V log V) once per workload
+    instead of O(V) per candidate tiling.
+    """
+
+    def __init__(self, nnz: np.ndarray):
+        self.nnz = np.ascontiguousarray(np.asarray(nnz, dtype=np.int64))
+        self._tile_max: dict[int, np.ndarray] = {}
+        self._sum_ntrips: dict[tuple[int, int], float] = {}
+        self._ntrips: dict[tuple[int, int], np.ndarray] = {}
+        self._bands: dict[tuple[int, int, int], BandStats] = {}
+
+    def tile_max(self, t_v: int) -> np.ndarray:
+        """Max nnz per consecutive vertex tile of size ``t_v`` (cached)."""
+        arr = self._tile_max.get(t_v)
+        if arr is None:
+            if t_v == 1:
+                arr = self.nnz
+            elif t_v % 2 == 0:
+                half = self.tile_max(t_v // 2)
+                if len(half) % 2:
+                    half = np.append(half, 0)
+                arr = half.reshape(-1, 2).max(axis=1)
+            else:
+                arr = _tiles_of(self.nnz, t_v)
+            self._tile_max[t_v] = arr
+        return arr
+
+    def n_vtiles(self, t_v: int) -> int:
+        return len(self.tile_max(t_v))
+
+    def ntrips(self, t_v: int, t_n: int) -> np.ndarray:
+        """Per-vertex-tile neighbor trip counts ``max(1, ceil(max_nnz/t_n))``."""
+        key = (t_v, t_n)
+        arr = self._ntrips.get(key)
+        if arr is None:
+            tm = self.tile_max(t_v)
+            arr = np.maximum(1, -(-tm // t_n)).astype(np.float64)
+            self._ntrips[key] = arr
+        return arr
+
+    def sum_ntrips(self, t_v: int, t_n: int) -> float:
+        key = (t_v, t_n)
+        val = self._sum_ntrips.get(key)
+        if val is None:
+            val = float(self.ntrips(*key).sum())
+            self._sum_ntrips[key] = val
+        return val
+
+    def band_stats(self, t_v: int, t_n: int, vtiles_per_chunk: int) -> BandStats:
+        """Per-chunk ntrip sums for bands of ``vtiles_per_chunk`` consecutive
+        vertex tiles (the PP row/element chunking), with sorted prefix sums."""
+        key = (t_v, t_n, vtiles_per_chunk)
+        bs = self._bands.get(key)
+        if bs is None:
+            nt = self.ntrips(t_v, t_n)
+            n_chunks = -(-len(nt) // vtiles_per_chunk)
+            pad = n_chunks * vtiles_per_chunk - len(nt)
+            if pad:
+                nt = np.pad(nt, (0, pad))
+            band = nt.reshape(n_chunks, vtiles_per_chunk).sum(axis=1)
+            sorted_all = np.sort(band)
+            sorted_tail = np.sort(band[1:])
+            bs = BandStats(
+                band=band,
+                sorted_all=sorted_all,
+                prefix_all=np.concatenate(([0.0], np.cumsum(sorted_all))),
+                sorted_tail=sorted_tail,
+                prefix_tail=np.concatenate(([0.0], np.cumsum(sorted_tail))),
+            )
+            self._bands[key] = bs
+        return bs
+
+
 def _loads(
     order: tuple[str, ...],
     trips: dict[str, float],
@@ -110,11 +240,14 @@ def aggregation_cost(
     hw: AcceleratorConfig,
     pe_budget: int | None = None,
     row_slice: slice | None = None,
+    stats: "TileStats | None" = None,
 ) -> PhaseCost:
     """Cost of the aggregation phase (SpMM) under an intra-phase dataflow.
 
     ``feat_extent`` is F for AC and G for CA.  ``row_slice`` restricts the
     evaluation to a band of vertices (used for PP/SP chunk accounting).
+    ``stats`` is an optional :class:`TileStats` cache for the *full* nnz
+    array (ignored when ``row_slice`` is given).
     """
     pe_budget = pe_budget or hw.n_pes
     if df.spatial_footprint > pe_budget:
@@ -123,6 +256,7 @@ def aggregation_cost(
         )
     if row_slice is not None:
         nnz = nnz[row_slice]
+        stats = None
     v = len(nnz)
     e = float(nnz.sum())
     if v == 0 or e == 0:
@@ -132,9 +266,13 @@ def aggregation_cost(
     order = df.order
     pos = {d: i for i, d in enumerate(order)}
 
-    tile_max = _tiles_of(nnz, t_v)  # (n_vtiles,)
-    ntrips = np.maximum(1, -(-tile_max // t_n)).astype(np.float64)
-    n_vtiles = len(tile_max)
+    if stats is not None:
+        ntrips = stats.ntrips(t_v, t_n)
+        n_vtiles = stats.n_vtiles(t_v)
+    else:
+        tile_max = _tiles_of(nnz, t_v)  # (n_vtiles,)
+        ntrips = np.maximum(1, -(-tile_max // t_n)).astype(np.float64)
+        n_vtiles = len(tile_max)
     f_trips = float(_ceil(feat_extent, t_f))
     sum_ntrips = float(ntrips.sum())
 
@@ -276,7 +414,10 @@ def pipelined_elements(df: GNNDataflow, wl: GNNLayerWorkload) -> float:
         rows_second, cols_second = df.cmb.tile("V"), df.cmb.tile("F")
     else:
         rows_first, cols_first = df.cmb.tile("V"), df.cmb.tile("G")
-        rows_second, cols_second = df.agg.tile("N"), df.agg.tile("F")
+        # The intermediate X.W is V x G; the aggregation phase consumes a
+        # band of it per *output vertex* tile, so its row granularity is the
+        # aggregation V tile (not N, which indexes gathered neighbors).
+        rows_second, cols_second = df.agg.tile("V"), df.agg.tile("F")
     t_v = max(rows_first, rows_second)
     t_f = max(cols_first, cols_second)
     if gran.value == "element":

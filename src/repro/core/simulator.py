@@ -22,6 +22,7 @@ import numpy as np
 from .cost_model import (
     GNNLayerWorkload,
     PhaseCost,
+    TileStats,
     aggregation_cost,
     combination_cost,
     pipelined_elements,
@@ -30,7 +31,14 @@ from .cost_model import (
     _tiles_of,
 )
 from .hw import AcceleratorConfig, DEFAULT_ACCEL
-from .taxonomy import GNNDataflow, InterPhase, PhaseOrder, Granularity
+from .taxonomy import (
+    Binding,
+    GNNDataflow,
+    InterPhase,
+    PhaseOrder,
+    Granularity,
+    classify_granularity,
+)
 
 
 @dataclass
@@ -97,8 +105,8 @@ def _pp_chunk_times(
     hw: AcceleratorConfig,
     pe_agg: int,
     pe_cmb: int,
-    agg_total: float,
-    cmb_total: float,
+    first_total: float,
+    second_total: float,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Per-chunk (producer, consumer) cycle arrays at the dataflow's
     pipelining granularity.  Exact row-band accounting for AC (captures
@@ -118,8 +126,8 @@ def _pp_chunk_times(
             n_f = int(_ceil(wl.g_out, max(df.cmb.tile("G"), df.agg.tile("F"))))
             n_chunks = n_v * n_f
         n_chunks = max(n_chunks, 1)
-        first = np.full(n_chunks, cmb_total / n_chunks)
-        second = np.full(n_chunks, agg_total / n_chunks)
+        first = np.full(n_chunks, first_total / n_chunks)
+        second = np.full(n_chunks, second_total / n_chunks)
         return first, second
 
     # ---- AC: exact row/element/column band accounting ---------------------
@@ -293,6 +301,436 @@ def simulate(
         agg_cycles=float(agg.cycles),
         cmb_cycles=float(cmb.cycles),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched, cache-backed simulation
+# ---------------------------------------------------------------------------
+#
+# The mapper sweeps thousands of candidate tilings per skeleton; every
+# quantity in `simulate` above is a closed-form scalar once the workload's
+# tile ladder (`TileStats`) is known, so a whole candidate grid can be
+# evaluated as numpy array ops.  `_eval_candidates` is the vectorized mirror
+# of `simulate` — the scalar path stays the reference oracle, and
+# `tests/test_mapper.py` pins the two to within 1e-6 relative tolerance.
+
+#: Candidate tile-size columns understood by the batch evaluator.
+TILE_COLUMNS = ("t_v_a", "t_n", "t_f_a", "t_v_c", "t_g", "t_f_c")
+
+
+@dataclass(frozen=True)
+class _GroupSpec:
+    """Structural (non-tile) description shared by a batch of candidates."""
+
+    inter: InterPhase
+    order: PhaseOrder
+    agg_order: tuple[str, ...]
+    cmb_order: tuple[str, ...]
+
+    @property
+    def granularity(self) -> Granularity:
+        return classify_granularity(self.order, self.agg_order, self.cmb_order)
+
+
+@dataclass
+class BatchStats:
+    """Vectorized simulation results for a batch of candidate dataflows.
+
+    Arrays are aligned with the candidate order passed to
+    :func:`simulate_batch`.  ``legal`` is False where the candidate violates
+    its PE budget (or is not pipelineable) — the scalar path raises
+    ``ValueError`` there instead.
+    """
+
+    cycles: np.ndarray
+    energy_pj: np.ndarray
+    legal: np.ndarray
+    agg_cycles: np.ndarray
+    cmb_cycles: np.ndarray
+    macs: np.ndarray
+    dataflows: list[GNNDataflow] | None = None
+
+    def __len__(self) -> int:
+        return len(self.cycles)
+
+    def objective(self, name: str) -> np.ndarray:
+        if name == "cycles":
+            return self.cycles
+        if name == "energy":
+            return self.energy_pj
+        if name == "edp":
+            return self.cycles * self.energy_pj
+        raise KeyError(name)
+
+    def masked_objective(self, name: str) -> np.ndarray:
+        """Objective with illegal candidates forced to +inf."""
+        obj = np.array(self.objective(name), dtype=np.float64)
+        obj[~self.legal] = np.inf
+        return obj
+
+
+def _unique_map(cols: list[np.ndarray], fn) -> np.ndarray:
+    """``fn(*key) -> float`` evaluated once per unique key row, broadcast
+    back to the full candidate length."""
+    stacked = np.stack([np.asarray(c, dtype=np.int64) for c in cols], axis=1)
+    uniq, inv = np.unique(stacked, axis=0, return_inverse=True)
+    vals = np.fromiter(
+        (fn(*row) for row in uniq), dtype=np.float64, count=len(uniq)
+    )
+    return vals[inv]
+
+
+def _buffer_energy_vec(hw: AcceleratorConfig, capacity_bytes: np.ndarray) -> np.ndarray:
+    """Vectorized :meth:`AcceleratorConfig.buffer_access_energy`."""
+    ratio = (capacity_bytes / hw.gb_bank_bytes) ** hw.buffer_energy_exponent
+    e = np.minimum(
+        np.maximum(hw.gb_energy_pj * ratio, hw.rf_energy_pj), hw.dram_energy_pj
+    )
+    return np.where(capacity_bytes <= 0, hw.rf_energy_pj, e)
+
+
+def _pp_closed_form(
+    spec: _GroupSpec,
+    c: dict[str, np.ndarray],
+    wl: GNNLayerWorkload,
+    ts: TileStats,
+    sum_nt: np.ndarray,
+    first_cycles: np.ndarray,
+    second_cycles: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Closed-form (nostall_cycles, sum_producer, sum_consumer) for the PP
+    two-stage pipeline — the vectorized mirror of `_pp_chunk_times` plus the
+    `a[0] + sum(max(a[1:], b[:-1])) + b[-1]` recurrence of `simulate`.
+
+    The consumer chunk time is a per-candidate constant, so the overlap term
+    reduces to ``sum(max(alpha * band, gamma))`` over the cached per-band
+    ntrip sums, answered in O(log n_chunks) via sorted prefix sums.
+    """
+    v, f_in, g_out = wl.v, wl.f_in, wl.g_out
+    feat = f_in if spec.order == PhaseOrder.AC else g_out
+    gran = spec.granularity
+    t_v_a, t_n, t_f_a = c["t_v_a"], c["t_n"], c["t_f_a"]
+    t_v_c, t_g, t_f_c = c["t_v_c"], c["t_g"], c["t_f_c"]
+
+    if spec.order == PhaseOrder.CA:
+        # proportional chunking (documented approximation, as in the scalar
+        # path): both chunk times are constants.
+        if gran == Granularity.ROW:
+            n_chunks = -(-v // np.maximum(t_v_c, t_n))
+        elif gran == Granularity.COLUMN:
+            n_chunks = -(-g_out // np.maximum(t_g, t_f_a))
+        else:
+            n_chunks = (-(-v // np.maximum(t_v_c, t_n))) * (
+                -(-g_out // np.maximum(t_g, t_f_a))
+            )
+        n_chunks = np.maximum(n_chunks, 1).astype(np.float64)
+        a_per = first_cycles / n_chunks
+        b_per = second_cycles / n_chunks
+        nostall = np.where(
+            n_chunks == 1,
+            a_per + b_per,
+            a_per + (n_chunks - 1) * np.maximum(a_per, b_per) + b_per,
+        )
+        return nostall, n_chunks * a_per, n_chunks * b_per
+
+    g_trips = (-(-g_out // t_g)).astype(np.float64)
+
+    if gran == Granularity.COLUMN:
+        cols = np.maximum(t_f_a, t_f_c)
+        n_chunks = (-(-feat // cols)).astype(np.float64)
+        a_per = sum_nt * (-(-cols // t_f_a))
+        gamma = (-(-v // t_v_c)) * g_trips * (-(-cols // t_f_c))
+        nostall = np.where(
+            n_chunks == 1,
+            a_per + gamma,
+            a_per + (n_chunks - 1) * np.maximum(a_per, gamma) + gamma,
+        )
+        return nostall, n_chunks * a_per, n_chunks * gamma
+
+    rows = np.maximum(t_v_a, t_v_c)
+    vpc = np.maximum(1, rows // t_v_a)
+    n = len(t_v_a)
+    nostall = np.empty(n, dtype=np.float64)
+    sum_a = np.empty(n, dtype=np.float64)
+    sum_b = np.empty(n, dtype=np.float64)
+    keys = np.stack([t_v_a, t_n, vpc], axis=1)
+    uniq, inv = np.unique(keys, axis=0, return_inverse=True)
+
+    if gran == Granularity.ROW:
+        alpha = (-(-feat // t_f_a)).astype(np.float64)
+        gamma = (-(-rows // t_v_c)) * g_trips * (-(-f_in // t_f_c))
+        for u, row in enumerate(uniq):
+            idx = np.flatnonzero(inv == u)
+            bs = ts.band_stats(int(row[0]), int(row[1]), int(row[2]))
+            al, ga = alpha[idx], gamma[idx]
+            nostall[idx] = al * bs.first + bs.sum_max_tail(al, ga) + ga
+            sum_a[idx] = al * bs.total
+            sum_b[idx] = bs.n_chunks * ga
+        return nostall, sum_a, sum_b
+
+    # ELEMENT: a row-major (row band x column band) chunk grid; the column
+    # bands repeat each row band's trip sum n_fchunks times.
+    cols = np.maximum(t_f_a, t_f_c)
+    n_f = (-(-feat // cols)).astype(np.float64)
+    alpha = (-(-cols // t_f_a)).astype(np.float64)
+    gamma = (-(-rows // t_v_c)) * g_trips * (-(-cols // t_f_c))
+    for u, row in enumerate(uniq):
+        idx = np.flatnonzero(inv == u)
+        bs = ts.band_stats(int(row[0]), int(row[1]), int(row[2]))
+        al, ga, nf = alpha[idx], gamma[idx], n_f[idx]
+        s_all = bs.sum_max_all(al, ga)
+        overlap = nf * s_all - np.maximum(al * bs.first, ga)
+        nostall[idx] = al * bs.first + overlap + ga
+        sum_a[idx] = nf * al * bs.total
+        sum_b[idx] = bs.n_chunks * nf * ga
+    return nostall, sum_a, sum_b
+
+
+def _eval_candidates(
+    spec: _GroupSpec,
+    cand: dict[str, np.ndarray],
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig,
+    ts: TileStats,
+) -> dict[str, np.ndarray]:
+    """Evaluate a structural group of candidates (shared loop orders /
+    inter-phase strategy, varying tile sizes + PE split) in one vectorized
+    pass.  Mirrors `simulate` + the per-phase cost model term by term.
+
+    ``cand`` columns: the six ``TILE_COLUMNS`` plus ``pe_split`` (float),
+    ``agg_n_temporal`` / ``cmb_f_temporal`` (reduction-loop bindings) and
+    ``sp_opt`` (bool).  Requires a non-empty workload (V > 0, E > 0).
+    """
+    t_v_a = np.asarray(cand["t_v_a"], dtype=np.int64)
+    t_n = np.asarray(cand["t_n"], dtype=np.int64)
+    t_f_a = np.asarray(cand["t_f_a"], dtype=np.int64)
+    t_v_c = np.asarray(cand["t_v_c"], dtype=np.int64)
+    t_g = np.asarray(cand["t_g"], dtype=np.int64)
+    t_f_c = np.asarray(cand["t_f_c"], dtype=np.int64)
+    split = np.asarray(cand["pe_split"], dtype=np.float64)
+    n = len(t_v_a)
+
+    v = wl.v
+    e = float(wl.nnz.sum())
+    f_in, g_out = wl.f_in, wl.g_out
+    ac = spec.order == PhaseOrder.AC
+    feat = f_in if ac else g_out
+
+    # ---- PE budgets + legality -------------------------------------------
+    fp_a = t_v_a * t_n * t_f_a
+    fp_c = t_v_c * t_g * t_f_c
+    if spec.inter == InterPhase.PP:
+        pe_first = np.maximum(1, np.rint(hw.n_pes * split).astype(np.int64))
+        pe_second = np.maximum(1, hw.n_pes - pe_first)
+        pe_agg, pe_cmb = (pe_first, pe_second) if ac else (pe_second, pe_first)
+    else:
+        pe_agg = pe_cmb = np.full(n, hw.n_pes, dtype=np.int64)
+    legal = (fp_a <= pe_agg) & (fp_c <= pe_cmb)
+    if spec.inter in (InterPhase.SP, InterPhase.PP):
+        if spec.granularity == Granularity.NONE:
+            legal = np.zeros(n, dtype=bool)
+
+    # ---- aggregation phase (cache-backed) --------------------------------
+    apos = {d: i for i, d in enumerate(spec.agg_order)}
+    f_trips_a = -(-feat // t_f_a)
+    sum_nt = _unique_map(
+        [t_v_a, t_n], lambda a, b: ts.sum_ntrips(int(a), int(b))
+    )
+    n_vt = _unique_map([t_v_a], lambda a: float(ts.n_vtiles(int(a))))
+    cycles_a = f_trips_a * sum_nt
+    macs_a = e * feat
+    adj = e * f_trips_a.astype(np.float64) if apos["F"] < apos["N"] else np.full(n, e)
+    inp_a = e * feat
+    spill_a = np.zeros(n, dtype=bool)
+    if apos["N"] < apos["F"]:
+        spill_a |= f_trips_a > 1
+    if apos["N"] < apos["V"]:
+        spill_a |= n_vt > 1
+    out_elems_a = float(v * feat)
+    visits_a = f_trips_a * sum_nt * t_v_a * t_f_a
+    psum_a = np.where(spill_a, np.maximum(0.0, visits_a - out_elems_a), 0.0)
+    rf_a = 2.0 * macs_a + np.where(
+        np.asarray(cand["agg_n_temporal"], dtype=bool),
+        2.0 * macs_a,
+        macs_a / np.maximum(t_n, 1),
+    )
+
+    # ---- combination phase -----------------------------------------------
+    cpos = {d: i for i, d in enumerate(spec.cmb_order)}
+    trips = {"V": -(-v // t_v_c), "G": -(-g_out // t_g), "F": -(-f_in // t_f_c)}
+    tripsf = {d: t.astype(np.float64) for d, t in trips.items()}
+    cycles_c = tripsf["V"] * tripsf["G"] * tripsf["F"]
+    macs_c = float(v) * g_out * f_in
+
+    def loads(relevant: tuple[str, ...]) -> np.ndarray:
+        # innermost effective relevant loop position; trip-1 loops above it
+        # contribute a factor of 1, so the product can run over all loops
+        j = np.full(n, -1, dtype=np.int64)
+        for d in relevant:
+            j = np.maximum(j, np.where(trips[d] > 1, cpos[d], -1))
+        out = np.ones(n, dtype=np.float64)
+        for d in spec.cmb_order:
+            out *= np.where(cpos[d] <= j, tripsf[d], 1.0)
+        return out
+
+    inp_c = loads(("V", "F")) * t_v_c * t_f_c
+    wt_c = loads(("F", "G")) * t_f_c * t_g
+    spill_c = np.zeros(n, dtype=bool)
+    if cpos["F"] < cpos["V"]:
+        spill_c |= trips["V"] > 1
+    if cpos["F"] < cpos["G"]:
+        spill_c |= trips["G"] > 1
+    spill_c &= trips["F"] > 1
+    vol_c = np.maximum(loads(("V", "G")), cycles_c) * t_v_c * t_g
+    out_elems_c = float(v) * g_out
+    psum_c = np.where(spill_c, np.maximum(0.0, vol_c - out_elems_c), 0.0)
+    rf_c = 2.0 * macs_c + np.where(
+        np.asarray(cand["cmb_f_temporal"], dtype=bool),
+        2.0 * macs_c,
+        macs_c / np.maximum(t_f_c, 1),
+    )
+
+    # ---- canonical traffic (int_* excluded from GB bandwidth as in the
+    # scalar path: it is either serialized at the phase boundary or moved
+    # through the PP ping-pong buffer) -------------------------------------
+    if ac:
+        first_cycles, second_cycles = cycles_a, cycles_c
+        first_nonint = adj + inp_a + 2.0 * psum_a
+        int_wr = np.full(n, out_elems_a)
+        second_nonint = wt_c + out_elems_c + 2.0 * psum_c
+        int_rd = inp_c
+    else:
+        first_cycles, second_cycles = cycles_c, cycles_a
+        first_nonint = inp_c + wt_c + 2.0 * psum_c
+        int_wr = np.full(n, out_elems_c)
+        second_nonint = adj + out_elems_a + 2.0 * psum_a
+        int_rd = np.full(n, inp_a)
+
+    # ---- intermediate buffering + per-access energy ----------------------
+    sp_opt = np.asarray(cand["sp_opt"], dtype=bool)
+    if ac:
+        rows_f, cols_f, rows_s, cols_s = t_v_a, t_f_a, t_v_c, t_f_c
+    else:
+        rows_f, cols_f, rows_s, cols_s = t_v_c, t_g, t_v_a, t_f_a
+    t_vmax = np.maximum(rows_f, rows_s)
+    t_fmax = np.maximum(cols_f, cols_s)
+    gran = spec.granularity
+    if gran == Granularity.ELEMENT:
+        pel = (t_vmax * t_fmax).astype(np.float64)
+    elif gran == Granularity.ROW:
+        pel = t_vmax * float(feat)
+    elif gran == Granularity.COLUMN:
+        pel = float(v) * t_fmax
+    else:
+        pel = np.full(n, float(v * feat))
+
+    bytes_per = hw.bytes_per_elem
+    if spec.inter == InterPhase.PP:
+        int_e = _buffer_energy_vec(hw, (2.0 * pel * bytes_per).astype(np.int64))
+    elif spec.inter == InterPhase.SEQ:
+        val = hw.gb_energy_pj
+        if (
+            hw.gb_capacity_bytes is not None
+            and v * feat * bytes_per > hw.gb_capacity_bytes
+        ):
+            val = hw.dram_energy_pj
+        int_e = np.full(n, val)
+    else:  # SP: optimized variants never move the intermediate
+        int_e = np.where(sp_opt, 0.0, hw.gb_energy_pj)
+
+    # ---- runtime ---------------------------------------------------------
+    bw = float(hw.gb_bandwidth)
+    stall_1 = np.maximum(1.0, first_nonint / np.maximum(bw * first_cycles, 1e-9))
+    stall_2 = np.maximum(1.0, second_nonint / np.maximum(bw * second_cycles, 1e-9))
+
+    if spec.inter in (InterPhase.SEQ, InterPhase.SP):
+        base = stall_1 * first_cycles + stall_2 * second_cycles
+        t_xfer = (int_wr + int_rd) / bw
+        if spec.inter == InterPhase.SEQ:
+            cycles = base + t_xfer
+        else:
+            cycles = base + np.where(sp_opt, 0.0, t_xfer)
+    else:
+        nostall, sum_a, sum_b = _pp_closed_form(
+            spec, cand, wl, ts, sum_nt, first_cycles, second_cycles
+        )
+        d1 = first_nonint / np.maximum(sum_a, 1e-9)
+        d2 = second_nonint / np.maximum(sum_b, 1e-9)
+        cycles = nostall * np.maximum(1.0, (d1 + d2) / bw)
+
+    # ---- energy ----------------------------------------------------------
+    int_traffic = np.where(sp_opt, 0.0, int_wr + int_rd)
+    energy = (
+        hw.gb_energy_pj * (first_nonint + second_nonint)
+        + int_e * int_traffic
+        + (rf_a + rf_c) * hw.rf_energy_pj
+    )
+
+    return {
+        "cycles": cycles.astype(np.float64),
+        "energy_pj": energy.astype(np.float64),
+        "legal": legal,
+        "agg_cycles": cycles_a.astype(np.float64),
+        "cmb_cycles": cycles_c.astype(np.float64),
+        "macs": np.full(n, macs_a + macs_c, dtype=np.float64),
+    }
+
+
+def simulate_batch(
+    dataflows: list[GNNDataflow],
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    tile_stats: TileStats | None = None,
+) -> BatchStats:
+    """Vectorized counterpart of :func:`simulate` for a list of candidates.
+
+    Candidates are grouped by loop-order structure and each group is
+    evaluated as numpy array ops over closed-form scalars memoized in a
+    per-workload :class:`TileStats` cache.  Candidates that violate their PE
+    budget (or are not pipelineable) come back with ``legal=False`` instead
+    of raising, so a whole mapper grid can be scored in one call.
+    """
+    ts = tile_stats if tile_stats is not None else TileStats(wl.nnz)
+    n = len(dataflows)
+    out = {
+        "cycles": np.zeros(n),
+        "energy_pj": np.zeros(n),
+        "legal": np.zeros(n, dtype=bool),
+        "agg_cycles": np.zeros(n),
+        "cmb_cycles": np.zeros(n),
+        "macs": np.zeros(n),
+    }
+    groups: dict[tuple, list[int]] = {}
+    for i, df in enumerate(dataflows):
+        key = (df.inter, df.order, df.agg.order, df.cmb.order)
+        groups.setdefault(key, []).append(i)
+    for key, idxs in groups.items():
+        spec = _GroupSpec(*key)
+        dfs = [dataflows[i] for i in idxs]
+        cand = {
+            "t_v_a": np.array([d.agg.tile("V") for d in dfs], dtype=np.int64),
+            "t_n": np.array([d.agg.tile("N") for d in dfs], dtype=np.int64),
+            "t_f_a": np.array([d.agg.tile("F") for d in dfs], dtype=np.int64),
+            "t_v_c": np.array([d.cmb.tile("V") for d in dfs], dtype=np.int64),
+            "t_g": np.array([d.cmb.tile("G") for d in dfs], dtype=np.int64),
+            "t_f_c": np.array([d.cmb.tile("F") for d in dfs], dtype=np.int64),
+            "pe_split": np.array([d.pe_split for d in dfs], dtype=np.float64),
+            "agg_n_temporal": np.array(
+                [d.agg.binding("N") == Binding.TEMPORAL for d in dfs], dtype=bool
+            ),
+            "cmb_f_temporal": np.array(
+                [d.cmb.binding("F") == Binding.TEMPORAL for d in dfs], dtype=bool
+            ),
+            "sp_opt": np.array(
+                [d.inter == InterPhase.SP and d.is_sp_optimized for d in dfs],
+                dtype=bool,
+            ),
+        }
+        res = _eval_candidates(spec, cand, wl, hw, ts)
+        ix = np.asarray(idxs)
+        for k in out:
+            out[k][ix] = res[k]
+    return BatchStats(dataflows=list(dataflows), **out)
 
 
 def simulate_model(

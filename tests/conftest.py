@@ -1,0 +1,1 @@
+"""Ensures the tests directory is importable (for hypothesis_compat)."""

@@ -127,6 +127,23 @@ class TestTable3Buffering:
         assert df.granularity.value == "element"
         assert table3_buffering(df, self.wl) == 2 * 4 * 8
 
+    def test_pp_ca_row_granularity_uses_agg_v_tile(self):
+        # CA intermediate (X.W) is V x G; the aggregation (second) phase
+        # consumes it per *output vertex* tile, so Pel's row term must use
+        # agg T_V — not T_N, which indexes gathered neighbor rows.
+        from repro.core import GNNDataflow, InterPhase, intra as mk
+
+        df = GNNDataflow(
+            InterPhase.PP,
+            PhaseOrder.CA,
+            mk("NsVtFs", "agg", N=4, F=8),
+            mk("VsGsFt", "cmb", V=2, G=4),
+        )
+        assert df.granularity.value == "row"
+        # rows in flight = max(cmb T_V = 2, agg T_V = 1); feat = G = 8
+        assert pipelined_elements(df, self.wl) == 2 * self.wl.g_out
+        assert table3_buffering(df, self.wl) == 2 * 2 * self.wl.g_out
+
     def test_pel_max_of_tile_sizes(self):
         # imbalanced tiles: Pel uses the max per dim (paper Sec. 4.4)
         from repro.core import GNNDataflow, InterPhase, intra as mk

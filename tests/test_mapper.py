@@ -1,0 +1,218 @@
+"""Mapper tests: candidate enumeration, the TileStats cache, dominance
+pruning / top-k, and batch-vs-scalar engine equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AcceleratorConfig,
+    GNNLayerWorkload,
+    TileStats,
+    named_dataflow,
+    named_skeleton,
+    optimize_tiles,
+    optimize_tiles_topk,
+    search_dataflows,
+    simulate,
+    simulate_batch,
+)
+from repro.core.mapper import TABLE5_NAMES, _phase_tilings, _pow2_up_to
+from repro.core.cost_model import _tiles_of
+
+HW = AcceleratorConfig()
+RNG = np.random.default_rng(3)
+
+
+def wl_random(v=512, f=64, g=16, max_deg=12, rng=RNG):
+    nnz = rng.integers(1, max_deg + 1, size=v)
+    nnz[rng.integers(v)] = max_deg * 20  # one evil row
+    return GNNLayerWorkload(nnz, f, g)
+
+
+class TestPow2Ladder:
+    def test_includes_pow2_and_3x2k(self):
+        assert _pow2_up_to(100, 512) == [1, 2, 3, 4, 6, 8, 12, 16, 24, 32,
+                                         48, 64, 96, 128, 192]
+
+    def test_capped_by_budget(self):
+        assert max(_pow2_up_to(10**6, 256)) <= 256
+
+    def test_small_extent(self):
+        assert _pow2_up_to(1, 512) == [1]
+
+
+class TestPhaseTilings:
+    def test_footprint_within_budget(self):
+        sk = named_skeleton("Seq-Nt")
+        ext = {"V": 1000, "N": 30, "F": 64}
+        for t in _phase_tilings(sk.agg, ext, budget=128):
+            assert t["V"] * t["N"] * t["F"] <= 128
+
+    def test_prefers_filled_tilings(self):
+        sk = named_skeleton("Seq-Nt")
+        ext = {"V": 1000, "N": 30, "F": 64}
+        tilings = _phase_tilings(sk.agg, ext, budget=128, min_fill=0.25)
+        assert all(t["V"] * t["N"] * t["F"] >= 32 for t in tilings)
+
+    def test_falls_back_to_loose_when_unfillable(self):
+        sk = named_skeleton("Seq-Nt")
+        ext = {"V": 2, "N": 1, "F": 2}  # tiny extents can't fill 512 PEs
+        tilings = _phase_tilings(sk.agg, ext, budget=512)
+        assert tilings  # loose fallback still returns legal tilings
+
+
+class TestTileStats:
+    def test_doubling_matches_direct(self):
+        nnz = np.random.default_rng(0).integers(0, 50, size=777)
+        ts = TileStats(nnz)
+        for t_v in (1, 2, 3, 4, 6, 8, 16, 64, 96, 512):
+            np.testing.assert_array_equal(ts.tile_max(t_v), _tiles_of(nnz, t_v))
+
+    def test_sum_ntrips_matches_direct(self):
+        nnz = np.random.default_rng(1).integers(1, 40, size=300)
+        ts = TileStats(nnz)
+        for t_v, t_n in [(1, 1), (4, 2), (8, 3), (16, 16)]:
+            tm = _tiles_of(nnz, t_v)
+            expect = float(np.maximum(1, -(-tm // t_n)).sum())
+            assert ts.sum_ntrips(t_v, t_n) == expect
+
+    def test_aggregation_cost_accepts_stats(self):
+        from repro.core import aggregation_cost, intra
+
+        nnz = np.random.default_rng(4).integers(1, 20, size=333)
+        ts = TileStats(nnz)
+        df = intra("VsFsNt", "agg", V=8, F=16)
+        plain = aggregation_cost(df, nnz, 64, HW)
+        cached = aggregation_cost(df, nnz, 64, HW, stats=ts)
+        assert cached.cycles == plain.cycles
+        assert cached.gb_reads == plain.gb_reads
+        assert cached.gb_writes == plain.gb_writes
+        # a row_slice must bypass the full-workload cache
+        sliced = aggregation_cost(df, nnz, 64, HW, row_slice=slice(0, 100), stats=ts)
+        ref = aggregation_cost(df, nnz[:100], 64, HW)
+        assert sliced.cycles == ref.cycles
+
+    def test_band_stats_sum_max(self):
+        nnz = np.random.default_rng(2).integers(1, 30, size=257)
+        ts = TileStats(nnz)
+        bs = ts.band_stats(4, 2, 3)
+        alpha, gamma = np.array([2.0, 5.0]), np.array([30.0, 1.0])
+        expect_all = np.array(
+            [np.maximum(a * bs.band, g).sum() for a, g in zip(alpha, gamma)]
+        )
+        np.testing.assert_allclose(bs.sum_max_all(alpha, gamma), expect_all)
+        expect_tail = np.array(
+            [np.maximum(a * bs.band[1:], g).sum() for a, g in zip(alpha, gamma)]
+        )
+        np.testing.assert_allclose(bs.sum_max_tail(alpha, gamma), expect_tail)
+
+
+class TestBatchScalarEquivalence:
+    """`simulate_batch` must agree with the scalar oracle to 1e-6 rel."""
+
+    def test_random_candidates(self):
+        rng = np.random.default_rng(11)
+        wl = wl_random(v=700, f=96, g=16, rng=rng)
+        tiles = [1, 2, 4, 8, 16, 32]
+        names = ["Seq-Nt", "Seq-Ns", "EnGN", "HyGCN", "AWB-GCN",
+                 "SP-FsNt-Fs", "SP-VsNt-Vs", "PP-Nt-Vt/sl", "PP-Ns-Vsh",
+                 "High-Vs-SP"]
+        dfs = []
+        while len(dfs) < 200:
+            name = names[rng.integers(len(names))]
+            kw = dict(
+                T_V_AGG=int(rng.choice(tiles)), T_N=int(rng.choice(tiles)),
+                T_F_AGG=int(rng.choice(tiles)), T_V_CMB=int(rng.choice(tiles)),
+                T_G=int(rng.choice([1, 2, 4, 8])),
+                T_F_CMB=int(rng.choice(tiles)),
+                pe_split=float(rng.choice([0.25, 0.5, 0.75])),
+            )
+            dfs.append(named_dataflow(name, **kw))
+        # PP element-granularity (both phases walk the V x F intermediate
+        # element-wise) — not reachable through the named catalog above
+        from repro.core import (
+            GNNDataflow, Granularity, InterPhase, PhaseOrder, intra,
+        )
+
+        for _ in range(30):
+            df = GNNDataflow(
+                InterPhase.PP,
+                PhaseOrder.AC,
+                intra("VsFsNt", "agg", V=int(rng.choice(tiles)),
+                      F=int(rng.choice(tiles))),
+                intra("VsFsGt", "cmb", V=int(rng.choice(tiles)),
+                      F=int(rng.choice(tiles))),
+                pe_split=float(rng.choice([0.25, 0.5, 0.75])),
+            )
+            assert df.granularity == Granularity.ELEMENT
+            dfs.append(df)
+        bs = simulate_batch(dfs, wl, HW)
+        legal = 0
+        for i, df in enumerate(dfs):
+            try:
+                s = simulate(df, wl, HW)
+            except ValueError:
+                assert not bs.legal[i], df
+                continue
+            assert bs.legal[i], df
+            legal += 1
+            assert bs.cycles[i] == pytest.approx(s.cycles, rel=1e-6)
+            assert bs.energy_pj[i] == pytest.approx(s.energy_pj, rel=1e-6)
+            assert bs.agg_cycles[i] == pytest.approx(s.agg_cycles, rel=1e-6)
+            assert bs.cmb_cycles[i] == pytest.approx(s.cmb_cycles, rel=1e-6)
+            assert bs.macs[i] == pytest.approx(s.macs, rel=1e-6)
+        assert legal >= 100  # the sample must actually exercise the engine
+
+    @pytest.mark.parametrize("name", TABLE5_NAMES)
+    def test_optimizer_engines_agree(self, name):
+        wl = wl_random(v=384, f=48, g=16)
+        kw = dict(objective="edp", pe_splits=(0.25, 0.5, 0.75))
+        batch = optimize_tiles(named_skeleton(name), wl, HW, **kw)
+        scalar = optimize_tiles(named_skeleton(name), wl, HW, engine="scalar", **kw)
+        assert batch.objective("edp") == pytest.approx(
+            scalar.objective("edp"), rel=1e-9
+        )
+
+
+class TestTopKAndPruning:
+    def test_topk_sorted_and_legal(self):
+        wl = wl_random()
+        res = optimize_tiles_topk(
+            named_skeleton("Seq-Nt"), wl, HW, objective="edp", top_k=5
+        )
+        assert 1 <= len(res) <= 5
+        objs = [r.objective("edp") for r in res]
+        assert objs == sorted(objs)
+        for r in res:
+            r.dataflow.validate(HW.n_pes)
+
+    def test_best_result_is_undominated(self):
+        # dominance pruning: nothing returned strictly dominates the winner
+        wl = wl_random()
+        res = optimize_tiles_topk(
+            named_skeleton("PP-Nt-Vt/sl"), wl, HW, objective="edp",
+            pe_splits=(0.25, 0.5, 0.75), top_k=8
+        )
+        best = res[0].stats
+        for r in res[1:]:
+            s = r.stats
+            dominates = (
+                s.cycles <= best.cycles
+                and s.energy_pj <= best.energy_pj
+                and (s.cycles < best.cycles or s.energy_pj < best.energy_pj)
+            )
+            assert not dominates
+
+    def test_search_dataflows_topk(self):
+        wl = wl_random(v=256)
+        flat = search_dataflows(wl, HW, top_k=2)
+        assert len(flat) >= len(search_dataflows(wl, HW, top_k=1))
+        objs = [r.objective("edp") for r in flat]
+        assert objs == sorted(objs)
+
+    def test_shared_tile_stats(self):
+        wl = wl_random(v=256)
+        ts = TileStats(wl.nnz)
+        a = search_dataflows(wl, HW, tile_stats=ts)
+        b = search_dataflows(wl, HW)
+        assert [r.skeleton for r in a] == [r.skeleton for r in b]
+        assert a[0].stats.cycles == b[0].stats.cycles

@@ -2,7 +2,7 @@
 tests over random workloads."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     AcceleratorConfig,
