@@ -8,6 +8,13 @@ the batch engine (>= 20x).  Pass ``--with-baseline`` to also time the scalar
 reference engine and report the measured speedup (slow: re-runs the legacy
 O(V)-per-candidate path).
 
+The ``synth-model-3layer`` case times the model-level mapper
+(`search_model`: per-layer top-k candidates + DP over inter-layer
+transition costs) on a 3-layer, 50k-vertex Kipf-style chain, asserts the
+heterogeneous result never loses to the homogeneous shared-dataflow
+baseline, guards its wall clock, and emits
+``experiments/benchmarks/search_model.json``.
+
     PYTHONPATH=src python -m benchmarks.mapper_search [--with-baseline]
 """
 from __future__ import annotations
@@ -15,7 +22,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import GNNLayerWorkload, TABLE5_NAMES, TileStats, named_skeleton
-from repro.core.mapper import optimize_tiles, search_dataflows
+from repro.core.mapper import optimize_tiles, search_dataflows, search_model
 
 from .common import emit, save_json, timed, workloads
 
@@ -30,6 +37,12 @@ SYNTH_CASES = {
 #: ~52.6s scalar baseline recorded in README.md).
 LARGE_BUDGET_US = 2.5e6
 
+#: Wall-clock guard for the 3-layer model-level search (DP over per-layer
+#: top-k candidates + homogeneous baseline, one shared TileStats ladder).
+MODEL_CASE = "synth-model-3layer"
+MODEL_WIDTHS = (128, 16, 16, 8)  # Kipf-style 3-layer feature chain
+MODEL_BUDGET_US = 10e6
+
 PE_SPLITS = (0.25, 0.5, 0.75)
 
 
@@ -38,6 +51,68 @@ def synth_workload(name: str) -> GNNLayerWorkload:
     rng = np.random.default_rng(0)
     nnz = np.maximum(1, rng.poisson(deg, size=v))
     return GNNLayerWorkload(nnz, f_in, g_out, name=name)
+
+
+def model_workloads(v: int = 50_000, deg: int = 8) -> list[GNNLayerWorkload]:
+    """The 3-layer, 50k-vertex model-search case (one shared graph)."""
+    rng = np.random.default_rng(0)
+    nnz = np.maximum(1, rng.poisson(deg, size=v))
+    return [
+        GNNLayerWorkload(nnz, MODEL_WIDTHS[i], MODEL_WIDTHS[i + 1],
+                         name=f"layer{i}")
+        for i in range(len(MODEL_WIDTHS) - 1)
+    ]
+
+
+def run_model_case() -> tuple[list[tuple[str, float, str]], dict, list[str]]:
+    """Time `search_model` (heterogeneous DP + homogeneous baseline, both
+    from one sweep) on the 3-layer 50k-vertex workload; emit evidence JSON +
+    regression guard."""
+    wls = model_workloads()
+    het, het_us = timed(search_model, wls, objective="cycles")
+    homo = het.shared_baseline
+    entry = {
+        "v": wls[0].v,
+        "widths": list(MODEL_WIDTHS),
+        "het_us": het_us,
+        "het_cycles": het.stats.cycles,
+        "homo_cycles": homo.stats.cycles,
+        "het_energy_pj": het.stats.energy_pj,
+        "homo_energy_pj": homo.stats.energy_pj,
+        "transition_cycles": het.stats.transition_cycles,
+        "relayouts": het.stats.n_relayouts,
+        "heterogeneous": het.is_heterogeneous,
+        "dataflows": [df.to_string() for df in het.dataflows],
+        "shared_dataflow": homo.dataflows[0].to_string(),
+        "budget_us": MODEL_BUDGET_US,
+    }
+    gain = homo.stats.cycles / max(het.stats.cycles, 1e-9)
+    rows = [
+        (
+            f"mapper/{MODEL_CASE}",
+            het_us,
+            f"v={wls[0].v};layers=3;het_cycles={het.stats.cycles:.0f};"
+            f"homo_cycles={homo.stats.cycles:.0f};gain={gain:.3f}x",
+        ),
+        (
+            f"mapper/{MODEL_CASE}/budget",
+            het_us,
+            f"budget_us={MODEL_BUDGET_US:.0f};ok={het_us <= MODEL_BUDGET_US}",
+        ),
+    ]
+    # guard failures are reported to the caller so evidence JSON is saved
+    # before anything raises
+    errors = []
+    if het.stats.cycles > homo.stats.cycles * (1 + 1e-9):
+        errors.append(
+            f"model search regression: heterogeneous {het.stats.cycles:.0f} "
+            f"cycles > homogeneous {homo.stats.cycles:.0f}"
+        )
+    if het_us > MODEL_BUDGET_US:
+        errors.append(
+            f"model search regression: {het_us:.0f}us > {MODEL_BUDGET_US:.0f}us"
+        )
+    return rows, entry, errors
 
 
 def _scalar_sweep(wl: GNNLayerWorkload) -> None:
@@ -54,10 +129,12 @@ def _scalar_sweep(wl: GNNLayerWorkload) -> None:
 
 def run(cases: list[str] | None = None, with_baseline: bool = False):
     rows, table = [], {}
+    run_model = cases is None or MODEL_CASE in cases
     if cases is None:
         synth_names = list(SYNTH_CASES)
         dataset_names = None  # all of Table 4
     else:
+        cases = [c for c in cases if c != MODEL_CASE]
         synth_names = [c for c in cases if c in SYNTH_CASES]
         dataset_names = [c for c in cases if c not in SYNTH_CASES]
 
@@ -90,12 +167,22 @@ def run(cases: list[str] | None = None, with_baseline: bool = False):
                 (f"mapper/{name}/budget", us,
                  f"budget_us={LARGE_BUDGET_US:.0f};ok={ok}")
             )
-    save_json("mapper_search", table)
+    model_errors: list[str] = []
+    if run_model:
+        model_rows, model_entry, model_errors = run_model_case()
+        rows.extend(model_rows)
+        save_json("search_model", model_entry)
+    if cases is None:
+        # only a full sweep refreshes the committed evidence — a partial
+        # (--fast / --only) run would silently truncate it
+        save_json("mapper_search", table)
     slow = table.get("synth-large", {}).get("batch_us", 0.0)
     if slow > LARGE_BUDGET_US:
         raise RuntimeError(
             f"mapper search regression: {slow:.0f}us > {LARGE_BUDGET_US:.0f}us"
         )
+    if model_errors:
+        raise RuntimeError("; ".join(model_errors))
     return rows
 
 

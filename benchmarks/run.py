@@ -34,7 +34,8 @@ MODULES = {
 }
 
 FAST_DATASETS = ["mutag", "collab", "citeseer"]
-FAST_MAPPER_CASES = ["synth-small", "mutag", "citeseer"]
+FAST_MAPPER_CASES = ["synth-small", "mutag", "citeseer",
+                     mapper_search.MODEL_CASE]
 
 
 def main() -> int:

@@ -1,9 +1,12 @@
-"""End-to-end GNN training with mapper-chosen dataflows.
+"""End-to-end GNN training with a mapper-chosen model-level schedule.
 
-For each dataset the mapping optimizer picks the best inter-phase dataflow
-(paper Sec. 5.2 "flexibility to choose from SP and PP leads to optimal
-dataflow"); the chosen policy then drives the actual JAX execution of a
-2-layer GCN trained on a node-classification task.
+The model-level mapper (`search_model`) picks one dataflow *per layer* via
+dynamic programming over inter-layer transition costs (paper Sec. 4.4: the
+pipelining granularity of one layer's output constrains the next layer),
+compares it against the best homogeneous shared-dataflow baseline, and the
+resulting `ModelSchedule` is lowered to executable knobs that drive the
+actual JAX execution of a 2-layer GCN trained on a node-classification
+task.
 
     PYTHONPATH=src python examples/train_gnn_dataflow.py [--dataset cora]
 """
@@ -12,13 +15,10 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import GNNLayerWorkload, search_dataflows
-from repro.core.taxonomy import InterPhase
+from repro.core import GNNLayerWorkload, search_model
 from repro.gnn import EllAdjacency, GNNConfig, gnn_loss, init_gnn
 from repro.gnn.model import make_node_classification_task
 from repro.graphs import load_dataset
-
-POLICY_OF = {InterPhase.SEQ: "seq", InterPhase.SP: "sp_opt", InterPhase.PP: "sp_generic"}
 
 
 def main():
@@ -26,29 +26,44 @@ def main():
     ap.add_argument("--dataset", default="cora")
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=8)
     args = ap.parse_args()
 
     g, spec = load_dataset(args.dataset)
-    wl = GNNLayerWorkload(g.nnz, spec.n_features, args.hidden, name=args.dataset)
+    wls = [
+        GNNLayerWorkload(g.nnz, spec.n_features, args.hidden, name="layer0"),
+        GNNLayerWorkload(g.nnz, args.hidden, args.classes, name="layer1"),
+    ]
 
-    # 1. mapper chooses the dataflow for this workload
-    best = search_dataflows(wl, objective="edp")[0]
-    inter = best.dataflow.inter
-    policy = POLICY_OF[inter]
-    print(f"{args.dataset}: mapper chose {best.skeleton} -> {best.dataflow}")
-    print(f"  simulated: cycles={best.stats.cycles:.0f} "
-          f"energy={best.stats.energy_pj/1e6:.1f}uJ -> JAX policy {policy!r}")
+    # 1. the model-level mapper picks a dataflow per layer (DP over
+    #    transition costs) and the homogeneous baseline for comparison
+    schedule = search_model(wls, objective="cycles")
+    homo = schedule.shared_baseline  # homogeneous best, from the same sweep
+    print(f"{args.dataset}: mapper-chosen model schedule")
+    print(schedule)
+    print(
+        f"  heterogeneous: {schedule.stats.cycles:.0f} cycles "
+        f"({schedule.stats.transition_cycles:.0f} in transitions, "
+        f"{schedule.stats.n_relayouts} relayouts)"
+    )
+    print(f"  homogeneous best: {homo.stats.cycles:.0f} cycles "
+          f"({homo.layers[0].dataflow.to_string()})")
+    print(f"  exec policies: {[s.policy for s in schedule.lower()]}")
 
-    # 2. train a 2-layer GCN under that execution policy
+    # 2. train a 2-layer GCN under the lowered schedule
     cfg = GNNConfig(kind="gcn", f_in=spec.n_features, hidden=args.hidden,
-                    n_classes=8, policy=policy)
-    adj = EllAdjacency.from_csr(g)
-    x, labels, mask = make_node_classification_task(g, spec.n_features, 8)
+                    n_classes=args.classes)
+    adj = EllAdjacency.from_schedule(g, schedule)  # schedule-chosen ELL rows
+    x, labels, mask = make_node_classification_task(
+        g, spec.n_features, args.classes
+    )
     params = init_gnn(cfg, jax.random.PRNGKey(0))
 
     @jax.jit
     def step(p):
-        l, grads = jax.value_and_grad(lambda q: gnn_loss(cfg, q, adj, x, labels, mask))(p)
+        l, grads = jax.value_and_grad(
+            lambda q: gnn_loss(cfg, q, adj, x, labels, mask, schedule=schedule)
+        )(p)
         return l, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, grads)
 
     for i in range(args.steps):

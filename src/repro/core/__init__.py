@@ -21,12 +21,33 @@ from .cost_model import (
     pipelined_elements,
     table3_buffering,
 )
-from .simulator import BatchStats, RunStats, simulate, simulate_batch, simulate_model
+from .schedule import (
+    ExecSpec,
+    LayerSchedule,
+    ModelSchedule,
+    TransitionSpec,
+    default_dataflow,
+    policy_of,
+    transition_spec,
+)
+from .simulator import (
+    BatchStats,
+    ModelStats,
+    RunStats,
+    TransitionStats,
+    simulate,
+    simulate_batch,
+    simulate_model,
+    transition_cost,
+    validate_workload_chain,
+)
 from .mapper import (
     MappingResult,
     TABLE5_NAMES,
     optimize_tiles,
     optimize_tiles_topk,
     search_dataflows,
+    search_model,
 )
 from .taxonomy import DataflowSkeleton, SkeletonPhase, Cons, named_skeleton, SKELETONS
+from .taxonomy import input_walk, output_walk, parse_dataflow

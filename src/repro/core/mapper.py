@@ -24,12 +24,18 @@ import numpy as np
 
 from .cost_model import GNNLayerWorkload, TileStats
 from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .schedule import LayerSchedule, ModelSchedule
 from .simulator import (
     BatchStats,
+    ModelStats,
     RunStats,
     _GroupSpec,
     _eval_candidates,
     simulate,
+    simulate_batch,
+    simulate_model,
+    transition_cost,
+    validate_workload_chain,
 )
 from .taxonomy import (
     Cons,
@@ -481,3 +487,181 @@ def search_dataflows(
             continue
     out.sort(key=lambda r: r.objective(objective))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Model-level search: DP over per-layer candidates with transition costs
+# ---------------------------------------------------------------------------
+
+
+def _dp_assign(
+    layer_dfs: list[list[GNNDataflow]],
+    layer_obj: list[np.ndarray],
+    workloads: list[GNNLayerWorkload],
+    hw: AcceleratorConfig,
+    objective: str,
+) -> tuple[list[int], float]:
+    """Exact dynamic program over per-layer candidate dataflows.
+
+    ``layer_obj[i][j]`` is layer *i* candidate *j*'s additive objective;
+    edges between consecutive layers are priced by
+    :func:`~repro.core.simulator.transition_cost`.  Returns the chosen
+    candidate index per layer and the end-to-end objective — equal to
+    brute-force enumeration over the same candidate lists
+    (``tests/test_schedule.py`` pins this).
+    """
+    prev_cost = np.asarray(layer_obj[0], dtype=np.float64)
+    back: list[np.ndarray] = []
+    for i in range(1, len(layer_dfs)):
+        cur = np.asarray(layer_obj[i], dtype=np.float64)
+        trans = np.empty((len(prev_cost), len(cur)), dtype=np.float64)
+        for j, a in enumerate(layer_dfs[i - 1]):
+            for k, b in enumerate(layer_dfs[i]):
+                trans[j, k] = transition_cost(
+                    a, b, v=workloads[i].v, f=workloads[i].f_in, hw=hw
+                ).objective(objective)
+        tot = prev_cost[:, None] + trans
+        arg = tot.argmin(axis=0)
+        back.append(arg)
+        prev_cost = tot[arg, np.arange(len(cur))] + cur
+    end = int(prev_cost.argmin())
+    total = float(prev_cost[end])
+    idx = [end]
+    for arg in reversed(back):
+        idx.append(int(arg[idx[-1]]))
+    return idx[::-1], total
+
+
+def search_model(
+    workloads: list[GNNLayerWorkload],
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    objective: str = "cycles",
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    top_k: int = 4,
+    shared_dataflow: bool = False,
+) -> ModelSchedule:
+    """End-to-end mapper for a multi-layer GNN (paper Sec. 4.4 composed).
+
+    Per layer, the batched Table-5 sweep (:func:`search_dataflows`, sharing
+    one :class:`TileStats` cache per distinct graph) yields up to
+    ``top_k`` Pareto candidates per skeleton; a dynamic program then picks
+    one candidate per layer minimizing ``sum(layer objective) +
+    sum(transition objective)`` where mismatched inter-layer walks charge
+    the re-layout of the V x F intermediate.
+
+    ``shared_dataflow=True`` reproduces the homogeneous baseline: the
+    single concrete dataflow (drawn from the same candidate pool) that
+    minimizes the end-to-end objective when reused for every layer.  The
+    heterogeneous DP also sees that winner as a candidate in every layer,
+    so its result is never worse than the homogeneous one.
+
+    ``objective`` must be additive across layers: "cycles" or "energy".
+    Returns a :class:`ModelSchedule` whose layers carry per-layer
+    ``RunStats`` and whose ``stats`` is the end-to-end
+    :class:`~repro.core.simulator.ModelStats`.
+    """
+    if objective not in ("cycles", "energy"):
+        raise ValueError(
+            f"model-level objective must be additive ('cycles' or 'energy'), "
+            f"got {objective!r}"
+        )
+    if not workloads:
+        raise ValueError("need at least one layer workload")
+    validate_workload_chain(workloads)
+
+    caches: dict[int, TileStats] = {}
+
+    def ts_for(wl: GNNLayerWorkload) -> TileStats:
+        key = id(wl.nnz)
+        if key not in caches:
+            caches[key] = TileStats(wl.nnz)
+        return caches[key]
+
+    per_layer = [
+        search_dataflows(
+            wl,
+            hw,
+            objective=objective,
+            names=names,
+            pe_splits=pe_splits,
+            top_k=top_k,
+            tile_stats=ts_for(wl),
+        )
+        for wl in workloads
+    ]
+    for i, cands in enumerate(per_layer):
+        if not cands:
+            raise RuntimeError(f"no legal mapping found for layer {i}")
+
+    # ---- homogeneous baseline: one concrete dataflow reused everywhere ----
+    # scored on the batch engine (one vectorized pass per layer over the
+    # whole candidate pool), with the self-transition charged when a
+    # dataflow's own output walk disagrees with its input walk; only the
+    # winner is re-simulated through the scalar oracle.
+    pool: list[GNNDataflow] = []
+    for cands in per_layer:
+        for r in cands:
+            if r.dataflow not in pool:
+                pool.append(r.dataflow)
+    totals = np.zeros(len(pool), dtype=np.float64)
+    for wl in workloads:
+        batch = simulate_batch(pool, wl, hw, tile_stats=ts_for(wl))
+        totals += batch.masked_objective(objective)
+    for k, df in enumerate(pool):
+        if not np.isfinite(totals[k]):
+            continue
+        totals[k] += sum(
+            transition_cost(
+                df, df, v=workloads[i].v, f=workloads[i].f_in, hw=hw
+            ).objective(objective)
+            for i in range(1, len(workloads))
+        )
+    if not np.isfinite(totals).any():
+        raise RuntimeError("no candidate dataflow is legal across all layers")
+    best_shared = pool[int(np.argmin(totals))]
+    best_shared_stats = simulate_model([best_shared], list(workloads), hw)
+    shared_schedule = ModelSchedule(
+        tuple(
+            LayerSchedule(best_shared, wl.f_in, wl.g_out, name=wl.name, stats=st)
+            for wl, st in zip(workloads, best_shared_stats.layers)
+        ),
+        tuple(t.spec for t in best_shared_stats.transitions),
+        objective=objective,
+        stats=best_shared_stats,
+    )
+
+    if shared_dataflow:
+        return shared_schedule
+
+    layer_dfs = [[r.dataflow for r in cands] for cands in per_layer]
+    layer_obj = [
+        np.array([r.objective(objective) for r in cands], dtype=np.float64)
+        for cands in per_layer
+    ]
+    # guarantee DP <= homogeneous: the shared winner is a path in the DP
+    for i, wl in enumerate(workloads):
+        if best_shared not in layer_dfs[i]:
+            layer_dfs[i].append(best_shared)
+            layer_obj[i] = np.append(
+                layer_obj[i],
+                best_shared_stats.layers[i].cycles
+                if objective == "cycles"
+                else best_shared_stats.layers[i].energy_pj,
+            )
+    idx, _ = _dp_assign(layer_dfs, layer_obj, list(workloads), hw, objective)
+    chosen = [layer_dfs[i][j] for i, j in enumerate(idx)]
+    stats = simulate_model(chosen, list(workloads), hw)
+
+    layers = tuple(
+        LayerSchedule(df, wl.f_in, wl.g_out, name=wl.name, stats=st)
+        for df, wl, st in zip(chosen, workloads, stats.layers)
+    )
+    transitions = tuple(t.spec for t in stats.transitions)
+    return ModelSchedule(
+        layers,
+        transitions,
+        objective=objective,
+        stats=stats,
+        shared_baseline=shared_schedule,
+    )

@@ -16,6 +16,7 @@ Collab case).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -39,6 +40,9 @@ from .taxonomy import (
     Granularity,
     classify_granularity,
 )
+
+if TYPE_CHECKING:
+    from .schedule import TransitionSpec
 
 
 @dataclass
@@ -733,14 +737,170 @@ def simulate_batch(
     return BatchStats(dataflows=list(dataflows), **out)
 
 
+# ---------------------------------------------------------------------------
+# Model-level simulation: per-layer stats + inter-layer transition costs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TransitionStats:
+    """Cost of one layer boundary (see :mod:`repro.core.schedule`).
+
+    When the producer's output walk disagrees with the consumer's input
+    walk, the V x F intermediate is re-materialized through the GB (or
+    DRAM, when it does not fit): one read + one write per element,
+    serialized between the layers.
+    """
+
+    spec: "TransitionSpec"
+    gb_accesses: float  # element accesses charged for the re-layout
+    cycles: float
+    energy_pj: float
+
+    @property
+    def relayout(self) -> bool:
+        return self.spec.relayout
+
+    def objective(self, name: str) -> float:
+        """Additive objective contribution (model-level DP uses this)."""
+        if name == "cycles":
+            return self.cycles
+        if name == "energy":
+            return self.energy_pj
+        raise KeyError(name)
+
+
+def transition_cost(
+    prev: GNNDataflow,
+    nxt: GNNDataflow,
+    v: int,
+    f: int,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+) -> TransitionStats:
+    """Price the hand-off of the V x F intermediate between two layers.
+
+    Matching walks are free — the consumer streams the producer's output
+    exactly as written, and the write/read traffic is already billed inside
+    each layer's :func:`simulate`.  Mismatched walks re-lay-out the matrix:
+    ``2 * V * F`` extra GB accesses (DRAM-priced when the matrix exceeds
+    the GB capacity), serialized at the boundary at the GB bandwidth.
+    """
+    from .schedule import transition_spec  # local: schedule imports taxonomy only
+
+    spec = transition_spec(prev, nxt, v=v, f=f)
+    if not spec.relayout:
+        return TransitionStats(spec, 0.0, 0.0, 0.0)
+    elems = float(spec.elements)
+    accesses = 2.0 * elems
+    e_per = hw.gb_energy_pj
+    if (
+        hw.gb_capacity_bytes is not None
+        and elems * hw.bytes_per_elem > hw.gb_capacity_bytes
+    ):
+        e_per = hw.dram_energy_pj
+    return TransitionStats(
+        spec,
+        gb_accesses=accesses,
+        cycles=accesses / float(hw.gb_bandwidth),
+        energy_pj=accesses * e_per,
+    )
+
+
+@dataclass
+class ModelStats:
+    """End-to-end statistics for a multi-layer GNN schedule."""
+
+    layers: list[RunStats]
+    transitions: list[TransitionStats]
+
+    def __post_init__(self):
+        if len(self.transitions) != max(len(self.layers) - 1, 0):
+            raise ValueError(
+                f"{len(self.layers)} layers need {len(self.layers) - 1} "
+                f"transitions, got {len(self.transitions)}"
+            )
+
+    @property
+    def layer_cycles(self) -> float:
+        return sum(s.cycles for s in self.layers)
+
+    @property
+    def transition_cycles(self) -> float:
+        return sum(t.cycles for t in self.transitions)
+
+    @property
+    def cycles(self) -> float:
+        return self.layer_cycles + self.transition_cycles
+
+    @property
+    def layer_energy_pj(self) -> float:
+        return sum(s.energy_pj for s in self.layers)
+
+    @property
+    def transition_energy_pj(self) -> float:
+        return sum(t.energy_pj for t in self.transitions)
+
+    @property
+    def energy_pj(self) -> float:
+        return self.layer_energy_pj + self.transition_energy_pj
+
+    @property
+    def n_relayouts(self) -> int:
+        return sum(t.relayout for t in self.transitions)
+
+    def objective(self, name: str) -> float:
+        if name == "cycles":
+            return self.cycles
+        if name == "energy":
+            return self.energy_pj
+        if name == "edp":
+            return self.cycles * self.energy_pj
+        raise KeyError(name)
+
+
+def validate_workload_chain(workloads: list[GNNLayerWorkload]) -> None:
+    """Each layer must consume the feature width the previous one produced."""
+    for i in range(1, len(workloads)):
+        prev, cur = workloads[i - 1], workloads[i]
+        if cur.f_in != prev.g_out:
+            raise ValueError(
+                f"workload {i} ({cur.name or 'unnamed'}) has f_in={cur.f_in} "
+                f"but workload {i - 1} ({prev.name or 'unnamed'}) produces "
+                f"g_out={prev.g_out}"
+            )
+
+
 def simulate_model(
     dataflows: list[GNNDataflow],
     workloads: list[GNNLayerWorkload],
     hw: AcceleratorConfig = DEFAULT_ACCEL,
-) -> list[RunStats]:
-    """Simulate a multi-layer GNN: one dataflow per layer (or one reused)."""
+) -> ModelStats:
+    """Simulate a multi-layer GNN: one dataflow per layer (or one reused).
+
+    Returns :class:`ModelStats` — per-layer :class:`RunStats` plus the
+    inter-layer :class:`TransitionStats` (re-layout traffic charged when
+    consecutive layers disagree on how the intermediate is walked) and the
+    end-to-end cycle/energy totals.
+    """
+    if not workloads:
+        raise ValueError("need at least one layer workload")
     if len(dataflows) == 1:
         dataflows = dataflows * len(workloads)
     if len(dataflows) != len(workloads):
-        raise ValueError("need one dataflow (shared) or one per layer")
-    return [simulate(d, w, hw) for d, w in zip(dataflows, workloads)]
+        raise ValueError(
+            f"got {len(dataflows)} dataflows for {len(workloads)} layer "
+            "workloads; pass exactly 1 (shared across layers) or one per layer"
+        )
+    validate_workload_chain(workloads)
+    layers = [simulate(d, w, hw) for d, w in zip(dataflows, workloads)]
+    transitions = [
+        transition_cost(
+            dataflows[i],
+            dataflows[i + 1],
+            v=workloads[i + 1].v,
+            f=workloads[i + 1].f_in,
+            hw=hw,
+        )
+        for i in range(len(workloads) - 1)
+    ]
+    return ModelStats(layers, transitions)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import enum
 import itertools
+import re
 from dataclasses import dataclass, field, replace
 from typing import Iterable, Sequence
 
@@ -273,6 +274,29 @@ class GNNDataflow:
             name = "SPopt"
         return f"{name}_{self.order.value}({self.agg}, {self.cmb})"
 
+    def to_string(self) -> str:
+        """Canonical, parseable template notation (paper Sec. 4.1):
+
+            <Inter>[<pe_split>]_<order>(<AggIntra>, <CmbIntra>)
+
+        Unlike ``str(df)`` this never renames SP to "SPopt" (the subset
+        membership is derived, not stored), always prints spatial tile
+        sizes, and carries the PP PE split so
+        ``parse_dataflow(df.to_string()) == df`` holds exactly.
+        """
+        def loops(ph: IntraPhaseDataflow) -> str:
+            out = []
+            for l in ph.loops:
+                t = f"({l.tile})" if l.spatial else ""
+                out.append(f"{l.dim}{l.binding.value}{t}")
+            return "".join(out)
+
+        split = f"[{self.pe_split!r}]" if self.inter == InterPhase.PP else ""
+        return (
+            f"{self.inter.value}{split}_{self.order.value}"
+            f"({loops(self.agg)}, {loops(self.cmb)})"
+        )
+
 
 # ---------------------------------------------------------------------------
 # Granularity classification (paper Sec 4.4, Table 2 rows 4-9)
@@ -337,6 +361,97 @@ def classify_granularity(
     if first[0] == first_ix["col"] and second[0] == second_ix["col"]:
         return Granularity.COLUMN
     return Granularity.NONE
+
+
+# ---------------------------------------------------------------------------
+# Template-notation parsing (inverse of GNNDataflow.to_string)
+# ---------------------------------------------------------------------------
+
+_DF_RE = re.compile(
+    r"^(?P<inter>Seq|SPopt|SP|PP)"
+    r"(?:\[(?P<split>[0-9.eE+-]+)\])?"
+    r"_(?P<order>AC|CA)"
+    r"\((?P<agg>[^,]+),\s*(?P<cmb>.+)\)$"
+)
+_LOOP_RE = re.compile(r"([VNFG])([st])(?:\((\d+)\))?")
+
+
+def _parse_intra(spec: str, phase: str) -> IntraPhaseDataflow:
+    loops, consumed = [], 0
+    for m in _LOOP_RE.finditer(spec):
+        if m.start() != consumed:
+            raise ValueError(f"malformed intra-phase spec {spec!r}")
+        consumed = m.end()
+        dim, b, tile = m.group(1), Binding(m.group(2)), m.group(3)
+        loops.append(Loop(dim, b, int(tile) if tile else 1))
+    if consumed != len(spec) or len(loops) != 3:
+        raise ValueError(f"malformed intra-phase spec {spec!r}")
+    return IntraPhaseDataflow(tuple(loops), phase=phase)
+
+
+def parse_dataflow(text: str) -> GNNDataflow:
+    """Parse the paper's ``<Inter><order>(<AggIntra>, <CmbIntra>)`` template.
+
+    Inverse of :meth:`GNNDataflow.to_string`; also accepts the "SPopt"
+    prefix that ``str(df)`` prints for SP-Optimized instances (membership is
+    re-derived from the loop structure, not stored).  A ``[pe_split]``
+    bracket after the inter-phase class carries the PP PE allocation.
+    """
+    m = _DF_RE.match(text.strip())
+    if m is None:
+        raise ValueError(f"cannot parse dataflow template {text!r}")
+    inter = InterPhase.SP if m["inter"] == "SPopt" else InterPhase(m["inter"])
+    kwargs = {}
+    if m["split"] is not None:
+        kwargs["pe_split"] = float(m["split"])
+    return GNNDataflow(
+        inter,
+        PhaseOrder(m["order"]),
+        _parse_intra(m["agg"].strip(), "agg"),
+        _parse_intra(m["cmb"].strip(), "cmb"),
+        **kwargs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer-boundary walk orders (model-level transition costing, Sec. 4.4)
+# ---------------------------------------------------------------------------
+
+
+def output_walk(df: GNNDataflow) -> str:
+    """Major order ("row" | "column") in which a layer's final V x F_out
+    output matrix is produced.
+
+    The output is written by the *second* phase of the phase order: the
+    combination (V x G) for AC, the aggregation (V x F) for CA.  For
+    pipelined dataflows (SP/PP) the walk follows the pipelining granularity;
+    for Seq it is the loop order of the producing phase.
+    """
+    second = df.second
+    col = "G" if second.phase == "cmb" else "F"
+    gran = df.granularity
+    if df.inter in (InterPhase.SP, InterPhase.PP) and gran != Granularity.NONE:
+        # element granularity walks the chunk grid row-major (see
+        # simulator._pp_chunk_times)
+        return "column" if gran == Granularity.COLUMN else "row"
+    order = second.order
+    return "row" if order.index("V") < order.index(col) else "column"
+
+
+def input_walk(df: GNNDataflow) -> str:
+    """Major order ("row" | "column") in which a layer streams its input
+    feature matrix X (V x F_in) out of the Global Buffer.
+
+    AC consumes X in the aggregation phase: neighbor *rows* are gathered by
+    N (row-major access), except when the F loop is outermost — then the
+    whole matrix is swept one column block at a time.  CA consumes X in the
+    combination GEMM as a dense (V, F) operand, column-major when F is
+    outer to V.
+    """
+    first = df.first
+    if first.phase == "cmb":
+        return "row" if first.order.index("V") < first.order.index("F") else "column"
+    return "column" if first.order[0] == "F" else "row"
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,12 @@ class EllAdjacency:
         idx, wts, _ = g.to_ell(block_rows)
         return cls(jnp.asarray(idx), jnp.asarray(wts), g.n_nodes)
 
+    @classmethod
+    def from_schedule(cls, g: CSRGraph, schedule) -> "EllAdjacency":
+        """Build the adjacency with a ModelSchedule's lowered ELL block
+        rows, so every layer's band scan walks aligned row groups."""
+        return cls.from_csr(g, block_rows=schedule.ell_block_rows)
+
     @property
     def v_pad(self) -> int:
         return self.indices.shape[0]
@@ -112,11 +118,23 @@ def multiphase_matmul(
     band_size: int = 128,
     use_pallas: bool = False,
     mesh=None,
+    block_f: int | None = None,
+    spec=None,
 ) -> jax.Array:
     """Execute aggregation + combination under an inter-phase policy.
 
     AC: (A @ X) @ W.  CA: A @ (X @ W).
+
+    ``spec`` (a :class:`repro.core.schedule.ExecSpec`, the lowered form of a
+    mapper-chosen :class:`~repro.core.schedule.LayerSchedule`) overrides the
+    individual ``policy`` / ``order`` / ``band_size`` / ``block_f`` /
+    ``use_pallas`` knobs — the schedule IR is the single source of truth
+    when one is provided.
     """
+    if spec is not None:
+        policy, order = spec.policy, spec.order
+        band_size, block_f = spec.band_size, spec.block_f
+        use_pallas = spec.use_pallas
     if policy not in POLICIES:
         raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
     if order not in ("AC", "CA"):
@@ -125,18 +143,33 @@ def multiphase_matmul(
     if policy == "pp":
         from .pp import pp_multiphase_matmul
 
-        return pp_multiphase_matmul(adj, x, w, order=order, mesh=mesh)
+        return pp_multiphase_matmul(
+            adj, x, w, order=order, mesh=mesh, band_size=band_size
+        )
+
+    def aggregate(feats: jax.Array) -> jax.Array:
+        if use_pallas:
+            from ..kernels.spmm.ops import spmm
+
+            return spmm(
+                adj.indices,
+                adj.weights,
+                feats,
+                block_v=band_size,
+                block_f=block_f or 128,
+            )
+        return aggregate_full(adj, feats)
 
     if order == "CA":
         xw = x @ w  # combination first (dense GEMM)
         if policy == "seq":
-            return aggregate_full(adj, xw)[: adj.n_nodes]
+            return aggregate(xw)[: adj.n_nodes]
         # SP: aggregate the combined features band by band
         return _band_scan(adj, xw, lambda h: h, band_size)[: adj.n_nodes]
 
     # ---- AC order ----------------------------------------------------------
     if policy == "seq":
-        h = aggregate_full(adj, x)  # intermediate fully materialized
+        h = aggregate(x)  # intermediate fully materialized
         return (h @ w)[: adj.n_nodes]
     if policy == "sp_generic":
         return _band_scan(adj, x, lambda h: h @ w, band_size)[: adj.n_nodes]
@@ -144,9 +177,9 @@ def multiphase_matmul(
     if use_pallas:
         from ..kernels.fused_agg_cmb.ops import fused_agg_cmb
 
-        return fused_agg_cmb(adj.indices, adj.weights, x, w, band_size=band_size)[
-            : adj.n_nodes
-        ]
+        return fused_agg_cmb(
+            adj.indices, adj.weights, x, w, band_size=band_size, block_f=block_f
+        )[: adj.n_nodes]
     return _band_scan(adj, x, lambda h: h @ w, band_size)[: adj.n_nodes]
 
 

@@ -1,4 +1,14 @@
-"""Multi-layer GNN models with per-layer multiphase dataflow policies."""
+"""Multi-layer GNN models with per-layer multiphase dataflow schedules.
+
+The execution path runs off the model-level schedule IR
+(:class:`repro.core.schedule.ModelSchedule`): ``gnn_forward`` lowers each
+layer's :class:`~repro.core.schedule.LayerSchedule` to its executable knobs
+and dispatches :func:`repro.gnn.layers.multiphase_matmul` with them.  The
+legacy string knobs (``GNNConfig.policy`` / ``order`` / ``band_size``) are
+kept as a thin compatibility shim that constructs a homogeneous default
+schedule (:meth:`ModelSchedule.from_policies`), so string-configured and
+mapper-searched models share one code path.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -7,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.schedule import ModelSchedule
 from ..graphs.csr import CSRGraph
 from .layers import LAYER_FNS, EllAdjacency, init_layer
 
@@ -18,9 +29,10 @@ class GNNConfig:
     hidden: int = 16  # Kipf-standard hidden width
     n_classes: int = 8
     n_layers: int = 2
-    policy: str = "sp_opt"  # inter-phase dataflow policy
+    policy: str = "sp_opt"  # inter-phase dataflow policy (shim; see module doc)
     order: str = "AC"  # phase order
     band_size: int = 128
+    use_pallas: bool = False  # route kernels through Pallas when lowering
 
     @property
     def dims(self) -> list[tuple[int, int]]:
@@ -32,30 +44,49 @@ class GNNConfig:
             f = out
         return ds
 
+    def default_schedule(self) -> ModelSchedule:
+        """The homogeneous ModelSchedule the string knobs stand for."""
+        return ModelSchedule.from_policies(
+            self.policy, self.order, self.dims, band_size=self.band_size
+        )
+
 
 def init_gnn(cfg: GNNConfig, rng: jax.Array):
     keys = jax.random.split(rng, cfg.n_layers)
     return [init_layer(cfg.kind, k, fi, fo) for k, (fi, fo) in zip(keys, cfg.dims)]
 
 
-def gnn_forward(cfg: GNNConfig, params, adj: EllAdjacency, x: jax.Array, mesh=None):
+def gnn_forward(
+    cfg: GNNConfig,
+    params,
+    adj: EllAdjacency,
+    x: jax.Array,
+    mesh=None,
+    schedule: ModelSchedule | None = None,
+):
+    """Forward pass under a model-level schedule.
+
+    ``schedule`` defaults to the homogeneous schedule constructed from the
+    config's string knobs; pass a mapper-searched
+    :class:`~repro.core.schedule.ModelSchedule` (``search_model`` ->
+    ``lower``) to run each layer under its own dataflow.
+    """
+    if schedule is None:
+        schedule = cfg.default_schedule()
+    if schedule.n_layers != len(params):
+        raise ValueError(
+            f"schedule has {schedule.n_layers} layers but params have "
+            f"{len(params)}"
+        )
     fn = LAYER_FNS[cfg.kind]
     h = x
-    for layer in params:
-        h = fn(
-            layer,
-            adj,
-            h,
-            policy=cfg.policy,
-            order=cfg.order,
-            band_size=cfg.band_size,
-            mesh=mesh,
-        )
+    for layer, spec in zip(params, schedule.lower(use_pallas=cfg.use_pallas)):
+        h = fn(layer, adj, h, spec=spec, mesh=mesh)
     return h  # logits (V, n_classes)
 
 
-def gnn_loss(cfg: GNNConfig, params, adj, x, labels, mask):
-    logits = gnn_forward(cfg, params, adj, x)
+def gnn_loss(cfg: GNNConfig, params, adj, x, labels, mask, schedule=None):
+    logits = gnn_forward(cfg, params, adj, x, schedule=schedule)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,4 +1,11 @@
-"""Jitted wrapper for the fused SP-Optimized kernel."""
+"""Jitted wrapper for the fused SP-Optimized kernel.
+
+``band_size`` is the Pallas row block (the schedule's T_V) and ``block_f``
+the feature block (T_F): when given, the contraction dimension is walked in
+``block_f`` chunks with a float32 accumulator over the output — the
+schedule IR's column tiling lowered onto the kernel grid, so a mapper
+choice like ``Vs(64)Fs(8)`` executes with exactly those block shapes.
+"""
 import functools
 
 import jax
@@ -8,12 +15,30 @@ from ..common import cdiv, default_interpret
 from .kernel import fused_agg_cmb_kernel as _raw
 
 
-@functools.partial(jax.jit, static_argnames=("band_size",))
-def fused_agg_cmb(indices, weights, x, w, band_size=128):
+@functools.partial(jax.jit, static_argnames=("band_size", "block_f"))
+def fused_agg_cmb(indices, weights, x, w, band_size=128, block_f=None):
     v_pad, d = indices.shape
+    f, g = w.shape
     bv = min(band_size, v_pad)
     vp = cdiv(v_pad, bv) * bv
     idx = jnp.pad(indices, ((0, vp - v_pad), (0, 0)))
     wts = jnp.pad(weights, ((0, vp - v_pad), (0, 0)))
-    out = _raw(idx, wts, x, w, block_v=bv, interpret=default_interpret())
-    return out[:v_pad]
+    interpret = default_interpret()
+    if block_f is None or block_f >= f:
+        out = _raw(idx, wts, x, w, block_v=bv, interpret=interpret)
+        return out[:v_pad]
+
+    bf = max(int(block_f), 1)
+    fp = cdiv(f, bf) * bf
+    xp = jnp.pad(x, ((0, 0), (0, fp - f)))
+    wp = jnp.pad(w, ((0, fp - f), (0, 0)))
+
+    def step(acc, fc):
+        xc = jax.lax.dynamic_slice_in_dim(xp, fc * bf, bf, axis=1)
+        wc = jax.lax.dynamic_slice_in_dim(wp, fc * bf, bf, axis=0)
+        part = _raw(idx, wts, xc, wc, block_v=bv, interpret=interpret)
+        return acc + part.astype(jnp.float32), None
+
+    acc0 = jnp.zeros((vp, g), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(fp // bf))
+    return acc[:v_pad].astype(x.dtype)

@@ -1,5 +1,6 @@
 """Tests for the dataflow taxonomy (paper Tables 1-2, Sec. 3)."""
 import pytest
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     Binding,
@@ -11,8 +12,9 @@ from repro.core import (
     intra,
     named_dataflow,
     named_skeleton,
+    parse_dataflow,
 )
-from repro.core.taxonomy import SKELETONS, classify_granularity
+from repro.core.taxonomy import SKELETONS, classify_granularity, input_walk, output_walk
 
 
 class TestEnumeration:
@@ -154,3 +156,81 @@ class TestNamed:
         assert named_skeleton("SP-FsNt-Fs").sp_optimized
         assert named_skeleton("High-Vs-SP").sp_optimized
         assert not named_skeleton("PP-Nt-Vsh").sp_optimized
+
+
+class TestTemplateRoundTrip:
+    """`to_string` / `parse_dataflow` invert each other over the paper's
+    `<Inter><order>(<AggIntra>, <CmbIntra>)` template notation."""
+
+    def test_full_enumeration_round_trips(self):
+        for df in enumerate_dataflows():
+            assert parse_dataflow(df.to_string()) == df
+
+    def test_spopt_prefix_accepted(self):
+        df = named_dataflow("EnGN", T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_F_CMB=16)
+        assert str(df).startswith("SPopt_")
+        assert parse_dataflow(str(df)) == df
+
+    def test_pe_split_round_trips(self):
+        df = named_dataflow(
+            "AWB-GCN", T_F_AGG=8, T_V_AGG=16, T_V_CMB=16, pe_split=0.25
+        )
+        s = df.to_string()
+        assert "[0.25]" in s
+        assert parse_dataflow(s) == df
+        assert parse_dataflow(s).pe_split == 0.25
+
+    @pytest.mark.parametrize(
+        "bad",
+        [
+            "Foo_AC(VtFtNt, VtGtFt)",
+            "Seq_AC(VtFtNt)",
+            "Seq_AC(VtFt, VtGtFt)",
+            "Seq_AC(VtFtXt, VtGtFt)",
+            "Seq_AC(VtFtNtNt, VtGtFt)",
+        ],
+    )
+    def test_malformed_rejected(self, bad):
+        with pytest.raises(ValueError):
+            parse_dataflow(bad)
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        tv=st.sampled_from([1, 2, 8, 64]),
+        tn=st.sampled_from([1, 4]),
+        tf=st.sampled_from([1, 16]),
+        tg=st.sampled_from([1, 2, 32]),
+        split=st.sampled_from([0.25, 0.5, 0.625]),
+        name=st.sampled_from(
+            ["Seq-Nt", "Seq-Ns", "EnGN", "HyGCN", "AWB-GCN", "PP-Nt-Vsh"]
+        ),
+    )
+    def test_property_tiled_round_trips(self, tv, tn, tf, tg, split, name):
+        df = named_dataflow(
+            name, T_V_AGG=tv, T_N=tn, T_F_AGG=tf, T_V_CMB=tv, T_G=tg,
+            T_F_CMB=tf, pe_split=split,
+        )
+        assert parse_dataflow(df.to_string()) == df
+
+
+class TestWalks:
+    """Layer-boundary walk classification (model-level transitions)."""
+
+    def test_table5_defaults_self_compatible(self):
+        # reusing one Table-5 dataflow across layers must never re-lay-out
+        for name in ("Seq-Nt", "EnGN", "HyGCN", "AWB-GCN"):
+            df = named_dataflow(
+                name, T_V_AGG=8, T_F_AGG=8, T_V_CMB=8, T_G=4, T_F_CMB=8
+            )
+            assert output_walk(df) == input_walk(df), name
+
+    def test_awb_gcn_is_column_major(self):
+        df = named_dataflow("AWB-GCN", T_F_AGG=8, T_V_AGG=8, T_V_CMB=8)
+        assert output_walk(df) == "column"
+        assert input_walk(df) == "column"
+
+    def test_row_pipelined_ac_is_row_major(self):
+        df = named_dataflow("HyGCN", T_F_AGG=8, T_V_CMB=8, T_G=4)
+        assert df.granularity == Granularity.ROW
+        assert output_walk(df) == "row"
+        assert input_walk(df) == "row"
