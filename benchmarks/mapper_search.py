@@ -8,12 +8,12 @@ the batch engine (>= 20x).  Pass ``--with-baseline`` to also time the scalar
 reference engine and report the measured speedup (slow: re-runs the legacy
 O(V)-per-candidate path).
 
-The ``synth-model-3layer`` case times the model-level mapper
-(`search_model`: per-layer top-k candidates + DP over inter-layer
-transition costs) on a 3-layer, 50k-vertex Kipf-style chain, asserts the
-heterogeneous result never loses to the homogeneous shared-dataflow
-baseline, guards its wall clock, and emits
-``experiments/benchmarks/search_model.json``.
+The ``synth-model-3layer`` case times the compiler front-end
+(`repro.compile`: per-layer top-k candidates + DP over inter-layer
+transition costs, lowered and packaged into a Program) on a 3-layer,
+50k-vertex Kipf-style chain, asserts the heterogeneous result never loses
+to the homogeneous shared-dataflow baseline, guards its wall clock, and
+emits ``experiments/benchmarks/search_model.json``.
 
     PYTHONPATH=src python -m benchmarks.mapper_search [--with-baseline]
 """
@@ -21,8 +21,9 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro
 from repro.core import GNNLayerWorkload, TABLE5_NAMES, TileStats, named_skeleton
-from repro.core.mapper import optimize_tiles, search_dataflows, search_model
+from repro.core.mapper import optimize_tiles, search_dataflows
 
 from .common import emit, save_json, timed, workloads
 
@@ -65,11 +66,12 @@ def model_workloads(v: int = 50_000, deg: int = 8) -> list[GNNLayerWorkload]:
 
 
 def run_model_case() -> tuple[list[tuple[str, float, str]], dict, list[str]]:
-    """Time `search_model` (heterogeneous DP + homogeneous baseline, both
-    from one sweep) on the 3-layer 50k-vertex workload; emit evidence JSON +
-    regression guard."""
+    """Time `repro.compile` (heterogeneous DP + homogeneous baseline, both
+    from one sweep, packaged into a Program) on the 3-layer 50k-vertex
+    workload; emit evidence JSON + regression guard."""
     wls = model_workloads()
-    het, het_us = timed(search_model, wls, objective="cycles")
+    prog, het_us = timed(repro.compile, wls, objective="cycles")
+    het = prog.schedule
     homo = het.shared_baseline
     entry = {
         "v": wls[0].v,

@@ -1,11 +1,14 @@
 """Design-space exploration: sweep the Table-5 dataflows over every
 Table-4 dataset and print the full comparison (the paper's Figs 9-10 as
-one table), plus the mapper's per-dataset winner.
+one table), then package each dataset's winner into a compiled Program
+via `repro.compile(..., schedule=...)` — the sweep is reused, not re-run.
 
     PYTHONPATH=src python examples/dataflow_explorer.py
 """
+import repro
 from repro.core import (
     GNNLayerWorkload,
+    ModelSchedule,
     TABLE5_NAMES,
     TileStats,
     named_skeleton,
@@ -16,6 +19,7 @@ from repro.graphs import TABLE4, load_dataset
 G_HIDDEN = 16
 
 print(f"{'dataset':12s} {'cat':4s} | " + " ".join(f"{n:>12s}" for n in TABLE5_NAMES))
+programs = {}
 for name in TABLE4:
     g, spec = load_dataset(name)
     wl = GNNLayerWorkload(g.nnz, spec.n_features, G_HIDDEN, name=name)
@@ -31,7 +35,19 @@ for name in TABLE4:
             base = base or c
             cells.append(f"{c / base:12.2f}")
             if c < best[1]:
-                best = (sk, c)
+                best = (r.dataflow, c)
         except Exception:
             cells.append(f"{'—':>12s}")
-    print(f"{name:12s} {spec.category:4s} | " + " ".join(cells) + f"   best={best[0]}")
+    # package the sweep's winner into a Program: compile with an explicit
+    # schedule skips the search and just prices + lowers it
+    schedule = ModelSchedule.from_dataflows(
+        [best[0]], [(wl.f_in, wl.g_out)], v=wl.v, names=[name]
+    )
+    programs[name] = repro.compile([wl], schedule=schedule)
+    print(f"{name:12s} {spec.category:4s} | " + " ".join(cells))
+
+print("\ncompiled winners (repro.compile over each sweep's best dataflow):")
+for name, prog in programs.items():
+    layer = prog.schedule.layers[0]
+    print(f"  {name:12s} {prog.stats.cycles:12.0f} cycles "
+          f"{prog.stats.energy_pj / 1e6:8.1f} uJ  {layer.dataflow.to_string()}")

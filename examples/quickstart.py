@@ -1,23 +1,24 @@
 """Quickstart: the paper in 40 lines.
 
 Describe a GNN dataflow with the taxonomy, simulate it on the spatial
-accelerator model, let the mapper pick the best dataflow per workload, and
-run the numerically-identical JAX execution policies.
+accelerator model, then let `repro.compile()` do the whole pipeline —
+mapper search, lowering to executable knobs, and packaging into a frozen,
+cacheable Program — and execute it in JAX.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+from pathlib import Path
+
 import jax
 import numpy as np
 
+import repro
 from repro.core import (
     AcceleratorConfig,
     GNNLayerWorkload,
-    ModelSchedule,
     named_dataflow,
-    named_skeleton,
-    optimize_tiles,
     search_dataflows,
-    search_model,
     simulate,
 )
 from repro.gnn import EllAdjacency, multiphase_matmul
@@ -43,28 +44,43 @@ for r in ranked[:4]:
     print(f"  {r.skeleton:12s} cycles={r.stats.cycles:9.0f} "
           f"E={r.stats.energy_pj/1e6:8.1f}uJ  {r.dataflow}")
 
-# --- 4. model-level search: one dataflow per layer, transitions priced -----
+# --- 4. repro.compile(): search -> lower -> execute in one call ------------
 # the 2-layer Kipf GCN shrinks 1433 -> 16 -> 8, so the optimal dataflow
-# changes per layer; the DP also charges re-laying-out the intermediate
-# when consecutive layers walk it differently
+# changes per layer; compile runs the model-level DP (transition costs
+# priced), lowers the winning schedule, and binds the graph
 wls = [
     GNNLayerWorkload(graph.nnz, spec.n_features, 16, name="layer0"),
     GNNLayerWorkload(graph.nnz, 16, 8, name="layer1"),
 ]
-schedule = search_model(wls, objective="cycles")
-homo = schedule.shared_baseline  # best shared dataflow, from the same sweep
-print(f"\nmodel-level schedule ({schedule.stats.cycles:.0f} cycles vs "
+program = repro.compile(wls, graph=graph, objective="cycles")
+homo = program.schedule.shared_baseline  # best shared dataflow, same sweep
+print(f"\ncompiled program ({program.stats.cycles:.0f} cycles vs "
       f"{homo.stats.cycles:.0f} homogeneous):")
-print(schedule)
-assert ModelSchedule.from_json(schedule.to_json()).dataflows == schedule.dataflows
+print(program)
 
-# --- 5. execute the same layer in JAX under each inter-phase policy --------
-adj = EllAdjacency.from_csr(graph)
+# the Program is a cacheable artifact: serving paths save it once and skip
+# the mapper forever after
+with tempfile.TemporaryDirectory() as td:
+    path = program.save(Path(td) / "cora.program.json")
+    reloaded = repro.Program.load(path, graph=graph)
+    assert reloaded.schedule == program.schedule
+    assert reloaded.stats == program.stats
+    print(f"saved + reloaded artifact: {path.name} "
+          f"({path.stat().st_size} bytes, byte-stable JSON)")
+
+# --- 5. execute the compiled program, and each policy by hand --------------
+params = program.init(jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
-x = rng.normal(size=(graph.n_nodes, spec.n_features)).astype(np.float32)
-w = rng.normal(size=(spec.n_features, 16)).astype(np.float32)
+x = jax.numpy.asarray(
+    rng.normal(size=(graph.n_nodes, spec.n_features)).astype(np.float32))
+logits = program.run(params, x)
+print(f"\nprogram.run -> logits {logits.shape}")
+
+adj = EllAdjacency.from_csr(graph)
+w = jax.numpy.asarray(
+    rng.normal(size=(spec.n_features, 16)).astype(np.float32))
 outs = {
-    p: multiphase_matmul(adj, jax.numpy.asarray(x), jax.numpy.asarray(w), policy=p)
+    p: multiphase_matmul(adj, x, w, policy=p)
     for p in ("seq", "sp_generic", "sp_opt")
 }
 ref = np.asarray(outs["seq"])

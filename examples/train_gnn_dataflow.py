@@ -1,11 +1,10 @@
-"""End-to-end GNN training with a mapper-chosen model-level schedule.
+"""End-to-end GNN training on a compiled Program.
 
-The model-level mapper (`search_model`) picks one dataflow *per layer* via
-dynamic programming over inter-layer transition costs (paper Sec. 4.4: the
-pipelining granularity of one layer's output constrains the next layer),
-compares it against the best homogeneous shared-dataflow baseline, and the
-resulting `ModelSchedule` is lowered to executable knobs that drive the
-actual JAX execution of a 2-layer GCN trained on a node-classification
+`repro.compile()` runs the model-level mapper (one dataflow *per layer*
+via dynamic programming over inter-layer transition costs — paper
+Sec. 4.4), lowers the winning `ModelSchedule` to executable knobs, and
+returns a frozen `Program` already bound to the graph; `program.loss` then
+drives the actual JAX training of a 2-layer GCN on a node-classification
 task.
 
     PYTHONPATH=src python examples/train_gnn_dataflow.py [--dataset cora]
@@ -13,10 +12,9 @@ task.
 import argparse
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import GNNLayerWorkload, search_model
-from repro.gnn import EllAdjacency, GNNConfig, gnn_loss, init_gnn
+import repro
+from repro.gnn import GNNConfig
 from repro.gnn.model import make_node_classification_task
 from repro.graphs import load_dataset
 
@@ -30,39 +28,34 @@ def main():
     args = ap.parse_args()
 
     g, spec = load_dataset(args.dataset)
-    wls = [
-        GNNLayerWorkload(g.nnz, spec.n_features, args.hidden, name="layer0"),
-        GNNLayerWorkload(g.nnz, args.hidden, args.classes, name="layer1"),
-    ]
 
-    # 1. the model-level mapper picks a dataflow per layer (DP over
-    #    transition costs) and the homogeneous baseline for comparison
-    schedule = search_model(wls, objective="cycles")
-    homo = schedule.shared_baseline  # homogeneous best, from the same sweep
-    print(f"{args.dataset}: mapper-chosen model schedule")
-    print(schedule)
+    # 1. compile: mapper search (DP over transition costs) + lowering +
+    #    graph binding, in one call
+    cfg = GNNConfig(kind="gcn", f_in=spec.n_features, hidden=args.hidden,
+                    n_classes=args.classes)
+    program = repro.compile(cfg, graph=g, objective="cycles")
+    homo = program.schedule.shared_baseline  # homogeneous best, same sweep
+    print(f"{args.dataset}: compiled program")
+    print(program)
     print(
-        f"  heterogeneous: {schedule.stats.cycles:.0f} cycles "
-        f"({schedule.stats.transition_cycles:.0f} in transitions, "
-        f"{schedule.stats.n_relayouts} relayouts)"
+        f"  heterogeneous: {program.stats.cycles:.0f} cycles "
+        f"({program.stats.transition_cycles:.0f} in transitions, "
+        f"{program.stats.n_relayouts} relayouts)"
     )
     print(f"  homogeneous best: {homo.stats.cycles:.0f} cycles "
           f"({homo.layers[0].dataflow.to_string()})")
-    print(f"  exec policies: {[s.policy for s in schedule.lower()]}")
+    print(f"  exec policies: {[s.policy for s in program.specs]}")
 
-    # 2. train a 2-layer GCN under the lowered schedule
-    cfg = GNNConfig(kind="gcn", f_in=spec.n_features, hidden=args.hidden,
-                    n_classes=args.classes)
-    adj = EllAdjacency.from_schedule(g, schedule)  # schedule-chosen ELL rows
+    # 2. train a 2-layer GCN through the compiled program
     x, labels, mask = make_node_classification_task(
         g, spec.n_features, args.classes
     )
-    params = init_gnn(cfg, jax.random.PRNGKey(0))
+    params = program.init(jax.random.PRNGKey(0))
 
     @jax.jit
     def step(p):
         l, grads = jax.value_and_grad(
-            lambda q: gnn_loss(cfg, q, adj, x, labels, mask, schedule=schedule)
+            lambda q: program.loss(q, x, labels, mask)
         )(p)
         return l, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, grads)
 

@@ -1,2 +1,11 @@
 """repro — multiphase sparse/dense dataflows (Garg et al. 2021) as a
-JAX/TPU framework.  See README.md / DESIGN.md / EXPERIMENTS.md."""
+JAX/TPU framework.  See README.md / DESIGN.md / EXPERIMENTS.md.
+
+The front door is :func:`repro.compile`: search a model-level dataflow
+schedule (or accept one), lower it to executable kernel knobs, and get a
+frozen :class:`repro.api.Program` with ``run``/``loss``/``stats`` and a
+cacheable ``save``/``load`` JSON artifact.
+"""
+from .api import Program, compile, workload_fingerprint
+
+__all__ = ["Program", "compile", "workload_fingerprint"]

@@ -1,0 +1,374 @@
+"""``repro.compile()``: one compiler-style front-end over the whole stack.
+
+The paper's thesis is that a *mapper* should pick intra- and inter-phase
+dataflows per workload and hand an optimized mapping to a flexible
+accelerator.  This module is the stable compilation boundary that composes
+every piece the repo already has:
+
+    search (``repro.core.mapper.search_model``)
+      -> lower (``ModelSchedule.lower`` -> per-layer ``ExecSpec``)
+        -> execute (the kernel registry behind ``repro.gnn``)
+
+behind a single entry point::
+
+    import repro
+    program = repro.compile(workloads, graph=g, objective="cycles")
+    logits  = program.run(params, x)       # runs the searched schedule
+    program.save("model.program.json")     # cacheable compiled artifact
+
+A :class:`Program` is a frozen artifact: the searched
+:class:`~repro.core.schedule.ModelSchedule`, the
+:class:`~repro.core.hw.AcceleratorConfig` it was priced on, the predicted
+:class:`~repro.core.simulator.ModelStats`, and a fingerprint of the
+workloads it was compiled for.  ``save``/``load`` round-trip all of that
+through byte-stable JSON so serving paths can cache compiled programs and
+skip the mapper entirely.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from dataclasses import asdict, dataclass, field, replace
+from pathlib import Path
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from .core.cost_model import GNNLayerWorkload
+from .core.hw import AcceleratorConfig, DEFAULT_ACCEL
+from .core.mapper import TABLE5_NAMES, search_model
+from .core.registry import get_objective
+from .core.schedule import ModelSchedule, TransitionSpec
+from .core.simulator import (
+    ModelStats,
+    RunStats,
+    TransitionStats,
+    simulate_model,
+)
+from .gnn.layers import LAYER_FNS, EllAdjacency, init_layer
+from .gnn.model import GNNConfig, forward_layers, masked_xent_loss
+from .graphs.csr import CSRGraph
+
+PROGRAM_FORMAT = "repro.program/v1"
+
+
+def workload_fingerprint(workloads: Sequence[GNNLayerWorkload]) -> dict:
+    """A compact identity for the graph + layer shapes a Program was
+    compiled for: cache keys for compiled artifacts.  The degree vector is
+    hashed with crc32 (stable across processes, unlike ``hash``)."""
+    first = workloads[0]
+    return {
+        "v": first.v,
+        "e": first.e,
+        "nnz_crc32": int(zlib.crc32(np.ascontiguousarray(first.nnz).tobytes())),
+        "dims": [[wl.f_in, wl.g_out] for wl in workloads],
+    }
+
+
+# ---------------------------------------------------------------------------
+# (De)serialization helpers for the costed stats
+# ---------------------------------------------------------------------------
+
+
+def _stats_to_dict(stats: ModelStats) -> dict:
+    return {
+        "layers": [asdict(s) for s in stats.layers],
+        "transitions": [
+            {
+                "spec": t.spec.to_dict(),
+                "gb_accesses": t.gb_accesses,
+                "cycles": t.cycles,
+                "energy_pj": t.energy_pj,
+            }
+            for t in stats.transitions
+        ],
+    }
+
+
+def _stats_from_dict(d: dict) -> ModelStats:
+    return ModelStats(
+        layers=[RunStats(**s) for s in d["layers"]],
+        transitions=[
+            TransitionStats(
+                spec=TransitionSpec.from_dict(t["spec"]),
+                gb_accesses=t["gb_accesses"],
+                cycles=t["cycles"],
+                energy_pj=t["energy_pj"],
+            )
+            for t in d["transitions"]
+        ],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Program
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Program:
+    """A compiled multiphase GNN: schedule + hardware + predicted cost.
+
+    Frozen artifact of :func:`repro.compile`.  ``run``/``loss`` execute the
+    searched schedule through the kernel registry; ``save``/``load``
+    round-trip the artifact through byte-stable JSON (schedule, hw,
+    predicted stats, workload fingerprint) so a serving path can cache the
+    compilation and never re-run the mapper.
+    """
+
+    schedule: ModelSchedule
+    hw: AcceleratorConfig = DEFAULT_ACCEL
+    kind: str = "gcn"  # gcn | sage | gin
+    objective: str = "cycles"
+    use_pallas: bool = False
+    fingerprint: dict = field(default_factory=dict)
+    stats: ModelStats | None = field(default=None, compare=False, repr=False)
+    #: runtime adjacency binding (set by compile(graph=...) / bind()); not
+    #: part of the artifact and never serialized.
+    adj: EllAdjacency | None = field(default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.kind not in LAYER_FNS:
+            raise ValueError(
+                f"kind must be one of {tuple(sorted(LAYER_FNS))}, got "
+                f"{self.kind!r}"
+            )
+        get_objective(self.objective)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def n_layers(self) -> int:
+        return self.schedule.n_layers
+
+    @property
+    def dims(self) -> list[tuple[int, int]]:
+        """(f_in, f_out) per layer, straight off the schedule."""
+        return [(l.f_in, l.f_out) for l in self.schedule.layers]
+
+    @property
+    def specs(self):
+        """The lowered per-layer :class:`ExecSpec` knobs."""
+        return self.schedule.lower(use_pallas=self.use_pallas)
+
+    # -- runtime binding ----------------------------------------------------
+    def bind(self, graph: CSRGraph) -> "Program":
+        """Bind a concrete graph: builds the padded-ELL adjacency with the
+        schedule's row grouping.  Returns a new Program (self is frozen)."""
+        return replace(
+            self, adj=EllAdjacency.from_schedule(graph, self.schedule)
+        )
+
+    def _require_adj(self) -> EllAdjacency:
+        if self.adj is None:
+            raise ValueError(
+                "Program has no graph bound; compile with graph=... or call "
+                "program.bind(graph) before run()/loss()"
+            )
+        return self.adj
+
+    # -- execution ----------------------------------------------------------
+    def init(self, rng: jax.Array):
+        """Initialize layer parameters matching the schedule's shapes."""
+        keys = jax.random.split(rng, self.n_layers)
+        return [
+            init_layer(self.kind, k, fi, fo)
+            for k, (fi, fo) in zip(keys, self.dims)
+        ]
+
+    def run(self, params, x: jax.Array, mesh=None) -> jax.Array:
+        """Forward pass under the compiled schedule (logits, shape
+        (V, f_out of the last layer))."""
+        adj = self._require_adj()
+        if len(params) != self.n_layers:
+            raise ValueError(
+                f"program has {self.n_layers} layers but params have "
+                f"{len(params)}"
+            )
+        return forward_layers(self.kind, params, adj, x, self.specs, mesh=mesh)
+
+    def loss(self, params, x, labels, mask, mesh=None):
+        """Masked softmax cross-entropy over :meth:`run`'s logits."""
+        return masked_xent_loss(self.run(params, x, mesh=mesh), labels, mask)
+
+    # -- artifact -----------------------------------------------------------
+    def to_json(self) -> str:
+        """Canonical (sorted-keys, 2-space indent) JSON artifact; stable
+        bytes across save/load/save."""
+        payload = {
+            "format": PROGRAM_FORMAT,
+            "kind": self.kind,
+            "objective": self.objective,
+            "use_pallas": self.use_pallas,
+            "fingerprint": self.fingerprint,
+            "hw": asdict(self.hw),
+            "schedule": json.loads(self.schedule.to_json(indent=None)),
+            "stats": None if self.stats is None else _stats_to_dict(self.stats),
+        }
+        return json.dumps(payload, indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "Program":
+        d = json.loads(text)
+        if d.get("format") != PROGRAM_FORMAT:
+            raise ValueError(
+                f"not a {PROGRAM_FORMAT} artifact "
+                f"(format={d.get('format')!r})"
+            )
+        stats = None if d["stats"] is None else _stats_from_dict(d["stats"])
+        return cls(
+            schedule=ModelSchedule.from_json(json.dumps(d["schedule"])),
+            hw=AcceleratorConfig(**d["hw"]),
+            kind=d["kind"],
+            objective=d["objective"],
+            use_pallas=d["use_pallas"],
+            fingerprint=d["fingerprint"],
+            stats=stats,
+        )
+
+    def save(self, path) -> Path:
+        """Write the artifact; returns the path."""
+        p = Path(path)
+        p.write_text(self.to_json())
+        return p
+
+    @classmethod
+    def load(cls, path, graph: CSRGraph | None = None) -> "Program":
+        """Load a saved artifact; with ``graph``, also bind the adjacency
+        (after checking the graph against the compiled fingerprint)."""
+        prog = cls.from_json(Path(path).read_text())
+        if graph is not None:
+            fp = prog.fingerprint
+            if fp:
+                crc = int(
+                    zlib.crc32(np.ascontiguousarray(graph.nnz).tobytes())
+                )
+                if graph.n_nodes != fp["v"]:
+                    raise ValueError(
+                        f"graph does not match the program's compiled "
+                        f"fingerprint: V={graph.n_nodes} vs compiled "
+                        f"V={fp['v']}"
+                    )
+                if crc != fp["nnz_crc32"]:
+                    raise ValueError(
+                        f"graph does not match the program's compiled "
+                        f"fingerprint: same V={fp['v']} but the degree "
+                        f"vector differs (nnz crc32 {crc} vs "
+                        f"{fp['nnz_crc32']})"
+                    )
+            prog = prog.bind(graph)
+        return prog
+
+    def __str__(self) -> str:
+        head = (
+            f"Program(kind={self.kind}, objective={self.objective}, "
+            f"layers={self.n_layers}"
+        )
+        if self.stats is not None:
+            head += (
+                f", predicted {self.stats.cycles:.0f} cycles / "
+                f"{self.stats.energy_pj / 1e6:.1f} uJ"
+            )
+        return head + ")\n" + str(self.schedule)
+
+
+# ---------------------------------------------------------------------------
+# compile()
+# ---------------------------------------------------------------------------
+
+
+def _resolve_workloads(
+    target, graph: CSRGraph | None
+) -> tuple[list[GNNLayerWorkload], GNNConfig | None]:
+    """``target`` is either a GNNConfig (needs a graph for the degree
+    vector) or an explicit per-layer workload sequence."""
+    if isinstance(target, GNNConfig):
+        if graph is None:
+            raise ValueError(
+                "compiling from a GNNConfig needs graph=... (the workload's "
+                "degree vector comes from the graph)"
+            )
+        wls = [
+            GNNLayerWorkload(graph.nnz, fi, fo, name=f"layer{i}")
+            for i, (fi, fo) in enumerate(target.dims)
+        ]
+        return wls, target
+    wls = list(target)
+    if not wls:
+        raise ValueError("need at least one layer workload")
+    for wl in wls:
+        if not isinstance(wl, GNNLayerWorkload):
+            raise TypeError(
+                f"compile() takes a GNNConfig or a sequence of "
+                f"GNNLayerWorkload, got {type(wl).__name__}"
+            )
+    return wls, None
+
+
+def compile(
+    target,
+    graph: CSRGraph | None = None,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    *,
+    objective: str = "cycles",
+    schedule: ModelSchedule | None = None,
+    kind: str | None = None,
+    use_pallas: bool | None = None,
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    top_k: int = 4,
+) -> Program:
+    """Search -> lower -> package: the one entry point over the mapper.
+
+    ``target`` is either a :class:`~repro.gnn.GNNConfig` (layer shapes from
+    its ``dims``; degree vector from ``graph``) or an explicit sequence of
+    :class:`~repro.core.cost_model.GNNLayerWorkload`.  Unless a
+    ``schedule`` is passed, the model-level mapper
+    (:func:`~repro.core.mapper.search_model`) picks one dataflow per layer
+    by dynamic programming over inter-layer transition costs; an explicit
+    ``schedule`` skips the search (it is validated against the workload
+    shapes and priced with :func:`simulate_model` if it carries no stats).
+
+    Returns a frozen :class:`Program`; with ``graph`` given, the program is
+    already bound and ``program.run(params, x)`` executes immediately.
+    """
+    get_objective(objective)
+    workloads, cfg = _resolve_workloads(target, graph)
+    if kind is None:
+        kind = cfg.kind if cfg is not None else "gcn"
+    if use_pallas is None:
+        use_pallas = cfg.use_pallas if cfg is not None else False
+
+    if schedule is None:
+        schedule = search_model(
+            workloads,
+            hw,
+            objective=objective,
+            names=names,
+            pe_splits=pe_splits,
+            top_k=top_k,
+        )
+        stats = schedule.stats  # priced by the search on this hw
+    else:
+        want = [(wl.f_in, wl.g_out) for wl in workloads]
+        have = [(l.f_in, l.f_out) for l in schedule.layers]
+        if want != have:
+            raise ValueError(
+                f"schedule layer shapes {have} do not match the workload "
+                f"shapes {want}"
+            )
+        # an explicit schedule may carry stats priced on a *different* hw
+        # (it does not record which); always re-price on the given one so
+        # the artifact's hw and predicted stats agree.
+        stats = simulate_model(schedule.dataflows, workloads, hw)
+
+    prog = Program(
+        schedule=schedule,
+        hw=hw,
+        kind=kind,
+        objective=objective,
+        use_pallas=use_pallas,
+        fingerprint=workload_fingerprint(workloads),
+        stats=stats,
+    )
+    return prog.bind(graph) if graph is not None else prog

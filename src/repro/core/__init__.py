@@ -11,6 +11,17 @@ from .taxonomy import (
     named_dataflow,
 )
 from .hw import AcceleratorConfig, TPUChipConfig, DEFAULT_ACCEL, TPU_V5E
+from .registry import (
+    Objective,
+    get_objective,
+    kernel_policies,
+    lookup_kernel,
+    objective_names,
+    objective_value,
+    register_kernel,
+    register_objective,
+    unregister_objective,
+)
 from .cost_model import (
     BandStats,
     GNNLayerWorkload,

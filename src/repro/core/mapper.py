@@ -24,6 +24,7 @@ import numpy as np
 
 from .cost_model import GNNLayerWorkload, TileStats
 from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .registry import get_objective, objective_names, objective_value
 from .schedule import LayerSchedule, ModelSchedule
 from .simulator import (
     BatchStats,
@@ -128,13 +129,9 @@ class MappingResult:
     skeleton: str = ""
 
     def objective(self, name: str) -> float:
-        if name == "cycles":
-            return self.stats.cycles
-        if name == "energy":
-            return self.stats.energy_pj
-        if name == "edp":
-            return self.stats.cycles * self.stats.energy_pj
-        raise KeyError(name)
+        """Objective value (resolved via the objective registry; unknown
+        names raise ``ValueError`` listing the valid ones)."""
+        return objective_value(name, self.stats.cycles, self.stats.energy_pj)
 
 
 # ---------------------------------------------------------------------------
@@ -468,6 +465,7 @@ def search_dataflows(
     enable.  The :class:`TileStats` cache is shared across all skeletons, so
     the whole sweep costs one O(V log V) ladder build plus numpy grid
     math."""
+    get_objective(objective)  # fail fast on unknown names, listing valid ones
     ts = tile_stats if tile_stats is not None else TileStats(wl.nnz)
     out: list[MappingResult] = []
     for n in names:
@@ -561,9 +559,10 @@ def search_model(
     ``RunStats`` and whose ``stats`` is the end-to-end
     :class:`~repro.core.simulator.ModelStats`.
     """
-    if objective not in ("cycles", "energy"):
+    if not get_objective(objective).additive:
         raise ValueError(
-            f"model-level objective must be additive ('cycles' or 'energy'), "
+            f"model-level objective must be additive "
+            f"({', '.join(objective_names(additive_only=True))}), "
             f"got {objective!r}"
         )
     if not workloads:

@@ -58,8 +58,8 @@ class ExecSpec:
     policy: str  # seq | sp_generic | sp_opt | pp
     order: str  # AC | CA
     band_size: int
-    block_f: int
-    ell_block_rows: int
+    block_f: int | None = None  # None = the kernel's own default
+    ell_block_rows: int = 1
     use_pallas: bool = False
 
 

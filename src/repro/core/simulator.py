@@ -32,6 +32,7 @@ from .cost_model import (
     _tiles_of,
 )
 from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .registry import get_objective, objective_names, objective_value
 from .taxonomy import (
     Binding,
     GNNDataflow,
@@ -358,13 +359,10 @@ class BatchStats:
         return len(self.cycles)
 
     def objective(self, name: str) -> np.ndarray:
-        if name == "cycles":
-            return self.cycles
-        if name == "energy":
-            return self.energy_pj
-        if name == "edp":
-            return self.cycles * self.energy_pj
-        raise KeyError(name)
+        """Objective values for the whole batch (see the objective
+        registry, :mod:`repro.core.registry`); unknown names raise
+        ``ValueError`` listing the valid ones."""
+        return objective_value(name, self.cycles, self.energy_pj)
 
     def masked_objective(self, name: str) -> np.ndarray:
         """Objective with illegal candidates forced to +inf."""
@@ -763,11 +761,13 @@ class TransitionStats:
 
     def objective(self, name: str) -> float:
         """Additive objective contribution (model-level DP uses this)."""
-        if name == "cycles":
-            return self.cycles
-        if name == "energy":
-            return self.energy_pj
-        raise KeyError(name)
+        obj = get_objective(name)
+        if not obj.additive:
+            raise ValueError(
+                f"transition costs only support additive objectives "
+                f"{objective_names(additive_only=True)}, got {name!r}"
+            )
+        return obj.fn(self.cycles, self.energy_pj)
 
 
 def transition_cost(
@@ -849,13 +849,8 @@ class ModelStats:
         return sum(t.relayout for t in self.transitions)
 
     def objective(self, name: str) -> float:
-        if name == "cycles":
-            return self.cycles
-        if name == "energy":
-            return self.energy_pj
-        if name == "edp":
-            return self.cycles * self.energy_pj
-        raise KeyError(name)
+        """End-to-end objective (resolved via the objective registry)."""
+        return objective_value(name, self.cycles, self.energy_pj)
 
 
 def validate_workload_chain(workloads: list[GNNLayerWorkload]) -> None:

@@ -1,8 +1,8 @@
 """GNN layers in JAX with explicit multiphase execution policies.
 
 Each layer is a two-phase sparse/dense chain (aggregation = SpMM over the
-padded-ELL adjacency, combination = GEMM).  The ``policy`` argument selects
-the paper's inter-phase dataflow as a *program structure*:
+padded-ELL adjacency, combination = GEMM).  The inter-phase dataflow is a
+*program structure*:
 
   * ``seq``        — materialize the full V x F intermediate, then GEMM
                      (paper Seq: intermediate round-trips through memory).
@@ -23,10 +23,15 @@ where the intermediate lives — exactly the paper's point.
 
 Phase order is a knob too: ``AC`` computes (A·X)·W, ``CA`` computes
 A·(X·W) — same result, different cost (paper Sec. 3.3; AWB-GCN is CA).
+
+Each executable path registers itself in the kernel registry
+(:mod:`repro.core.registry`) keyed by the
+:class:`~repro.core.schedule.ExecSpec` fields ``(policy, order,
+use_pallas)``; :func:`multiphase_matmul` is a thin dispatcher that
+normalizes its arguments into an ``ExecSpec`` and looks the path up.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Callable
 
@@ -34,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.registry import lookup_kernel, register_kernel
+from ..core.schedule import ExecSpec
 from ..graphs.csr import CSRGraph
 
 POLICIES = ("seq", "sp_generic", "sp_opt", "pp")
@@ -105,82 +112,143 @@ def _band_scan(
 
 
 # ---------------------------------------------------------------------------
+# Registered executable paths (keyed by ExecSpec fields)
+# ---------------------------------------------------------------------------
+
+
+@register_kernel("seq", orders=("AC",))
+def _seq_ac(adj, x, w, spec, mesh):
+    """Seq/AC: materialize the full aggregated intermediate, then GEMM."""
+    return (aggregate_full(adj, x) @ w)[: adj.n_nodes]
+
+
+@register_kernel("seq", orders=("CA",))
+def _seq_ca(adj, x, w, spec, mesh):
+    """Seq/CA: dense GEMM first, then whole-graph aggregation."""
+    return aggregate_full(adj, x @ w)[: adj.n_nodes]
+
+
+@register_kernel("seq", pallas=(True,))
+def _seq_pallas(adj, x, w, spec, mesh):
+    """Seq with the aggregation routed through the Pallas ELL SpMM."""
+    from ..kernels.spmm.ops import spmm
+
+    feats = x @ w if spec.order == "CA" else x
+    h = spmm(
+        adj.indices,
+        adj.weights,
+        feats,
+        block_v=spec.band_size,
+        block_f=spec.block_f or 128,
+    )
+    if spec.order == "CA":
+        return h[: adj.n_nodes]
+    return (h @ w)[: adj.n_nodes]
+
+
+@register_kernel("sp_generic", orders=("AC",))
+@register_kernel("sp_opt", orders=("AC",))
+def _sp_ac(adj, x, w, spec, mesh):
+    """SP/AC band scan: each band's intermediate lives inside one scan
+    step, and the fused step keeps the aggregated tile as the immediate
+    GEMM operand — the jnp body of both SP-Generic and SP-Optimized."""
+    return _band_scan(adj, x, lambda h: h @ w, spec.band_size)[: adj.n_nodes]
+
+
+@register_kernel("sp_generic", orders=("CA",))
+@register_kernel("sp_opt", orders=("CA",))
+def _sp_ca(adj, x, w, spec, mesh):
+    """SP/CA: aggregate the combined features band by band."""
+    return _band_scan(adj, x @ w, lambda h: h, spec.band_size)[: adj.n_nodes]
+
+
+@register_kernel("sp_opt", orders=("AC",), pallas=(True,))
+def _sp_opt_fused(adj, x, w, spec, mesh):
+    """SP-Optimized/AC on TPU: the fused aggregation+combination kernel."""
+    from ..kernels.fused_agg_cmb.ops import fused_agg_cmb
+
+    return fused_agg_cmb(
+        adj.indices,
+        adj.weights,
+        x,
+        w,
+        band_size=spec.band_size,
+        block_f=spec.block_f,
+    )[: adj.n_nodes]
+
+
+@register_kernel("pp")
+def _pp(adj, x, w, spec, mesh):
+    """Parallel Pipeline: producer/consumer device groups (repro.gnn.pp)."""
+    from .pp import pp_multiphase_matmul
+
+    return pp_multiphase_matmul(
+        adj, x, w, order=spec.order, mesh=mesh, band_size=spec.band_size
+    )
+
+
+# ---------------------------------------------------------------------------
 # Two-phase execution under a multiphase policy
 # ---------------------------------------------------------------------------
+
+_SPEC_KNOBS = ("policy", "order", "band_size", "block_f", "use_pallas")
 
 
 def multiphase_matmul(
     adj: EllAdjacency,
     x: jax.Array,
     w: jax.Array,
-    policy: str = "sp_opt",
-    order: str = "AC",
-    band_size: int = 128,
-    use_pallas: bool = False,
+    policy: str | None = None,
+    order: str | None = None,
+    band_size: int | None = None,
+    use_pallas: bool | None = None,
     mesh=None,
     block_f: int | None = None,
-    spec=None,
+    spec: ExecSpec | None = None,
 ) -> jax.Array:
     """Execute aggregation + combination under an inter-phase policy.
 
     AC: (A @ X) @ W.  CA: A @ (X @ W).
 
     ``spec`` (a :class:`repro.core.schedule.ExecSpec`, the lowered form of a
-    mapper-chosen :class:`~repro.core.schedule.LayerSchedule`) overrides the
-    individual ``policy`` / ``order`` / ``band_size`` / ``block_f`` /
-    ``use_pallas`` knobs — the schedule IR is the single source of truth
-    when one is provided.
+    mapper-chosen :class:`~repro.core.schedule.LayerSchedule`) is the single
+    source of truth when one is provided: passing an explicit ``policy`` /
+    ``order`` / ``band_size`` / ``block_f`` / ``use_pallas`` kwarg that
+    disagrees with the spec raises :class:`ValueError` rather than being
+    silently ignored.  Without a spec, the string knobs build one
+    (defaults: ``sp_opt`` / ``AC`` / band 128), so both entry styles
+    dispatch through the same kernel registry.
     """
     if spec is not None:
-        policy, order = spec.policy, spec.order
-        band_size, block_f = spec.band_size, spec.block_f
-        use_pallas = spec.use_pallas
-    if policy not in POLICIES:
-        raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
-    if order not in ("AC", "CA"):
-        raise ValueError(f"order must be AC or CA, got {order!r}")
-
-    if policy == "pp":
-        from .pp import pp_multiphase_matmul
-
-        return pp_multiphase_matmul(
-            adj, x, w, order=order, mesh=mesh, band_size=band_size
+        given = dict(
+            policy=policy,
+            order=order,
+            band_size=band_size,
+            block_f=block_f,
+            use_pallas=use_pallas,
         )
-
-    def aggregate(feats: jax.Array) -> jax.Array:
-        if use_pallas:
-            from ..kernels.spmm.ops import spmm
-
-            return spmm(
-                adj.indices,
-                adj.weights,
-                feats,
-                block_v=band_size,
-                block_f=block_f or 128,
+        conflicts = {
+            k: v
+            for k, v in given.items()
+            if v is not None and v != getattr(spec, k)
+        }
+        if conflicts:
+            raise ValueError(
+                f"multiphase_matmul got an ExecSpec plus conflicting explicit "
+                f"kwargs {conflicts}; the spec has "
+                f"{ {k: getattr(spec, k) for k in conflicts} } — pass one or "
+                f"the other"
             )
-        return aggregate_full(adj, feats)
-
-    if order == "CA":
-        xw = x @ w  # combination first (dense GEMM)
-        if policy == "seq":
-            return aggregate(xw)[: adj.n_nodes]
-        # SP: aggregate the combined features band by band
-        return _band_scan(adj, xw, lambda h: h, band_size)[: adj.n_nodes]
-
-    # ---- AC order ----------------------------------------------------------
-    if policy == "seq":
-        h = aggregate(x)  # intermediate fully materialized
-        return (h @ w)[: adj.n_nodes]
-    if policy == "sp_generic":
-        return _band_scan(adj, x, lambda h: h @ w, band_size)[: adj.n_nodes]
-    # sp_opt: fused aggregation+combination tile kernel
-    if use_pallas:
-        from ..kernels.fused_agg_cmb.ops import fused_agg_cmb
-
-        return fused_agg_cmb(
-            adj.indices, adj.weights, x, w, band_size=band_size, block_f=block_f
-        )[: adj.n_nodes]
-    return _band_scan(adj, x, lambda h: h @ w, band_size)[: adj.n_nodes]
+    else:
+        spec = ExecSpec(
+            policy=policy if policy is not None else "sp_opt",
+            order=order if order is not None else "AC",
+            band_size=band_size if band_size is not None else 128,
+            block_f=block_f,
+            use_pallas=bool(use_pallas),
+        )
+    kernel = lookup_kernel(spec.policy, spec.order, spec.use_pallas)
+    return kernel(adj, x, w, spec, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -188,13 +256,13 @@ def multiphase_matmul(
 # ---------------------------------------------------------------------------
 
 
-def gcn_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
+def gcn_layer(params, adj, x, *, policy=None, order=None, **kw):
     """GCN: relu(Ã X W + b) with the multiphase policy."""
     out = multiphase_matmul(adj, x, params["w"], policy=policy, order=order, **kw)
     return jax.nn.relu(out + params["b"])
 
 
-def sage_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
+def sage_layer(params, adj, x, *, policy=None, order=None, **kw):
     """GraphSAGE with the paper's Sec.-6 decomposition:
 
         concat(X, A·X) @ W  ==  X @ W_top + (A·X) @ W_bottom
@@ -209,7 +277,7 @@ def sage_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
     return jax.nn.relu(self_term + agg_term + params["b"])
 
 
-def gin_layer(params, adj, x, *, policy="sp_opt", order="AC", **kw):
+def gin_layer(params, adj, x, *, policy=None, order=None, **kw):
     """GIN: MLP((1 + eps) * x + sum-aggregate(x)).
 
     The sum aggregation is the same SpMM with unit weights; the first MLP

@@ -3,14 +3,21 @@
 The execution path runs off the model-level schedule IR
 (:class:`repro.core.schedule.ModelSchedule`): ``gnn_forward`` lowers each
 layer's :class:`~repro.core.schedule.LayerSchedule` to its executable knobs
-and dispatches :func:`repro.gnn.layers.multiphase_matmul` with them.  The
-legacy string knobs (``GNNConfig.policy`` / ``order`` / ``band_size``) are
-kept as a thin compatibility shim that constructs a homogeneous default
-schedule (:meth:`ModelSchedule.from_policies`), so string-configured and
-mapper-searched models share one code path.
+and dispatches :func:`repro.gnn.layers.multiphase_matmul` with them.
+
+.. deprecated::
+    Configuring execution through the ``GNNConfig.policy`` / ``order`` /
+    ``band_size`` string knobs is deprecated.  They remain as a thin
+    compatibility shim that constructs a homogeneous default schedule
+    (:meth:`ModelSchedule.from_policies`) and emits a one-time
+    :class:`DeprecationWarning`; new code should compile a
+    :class:`repro.api.Program` with :func:`repro.compile` (or pass an
+    explicit ``ModelSchedule``), so string-configured and mapper-searched
+    models share one code path.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -21,6 +28,23 @@ from ..core.schedule import ModelSchedule
 from ..graphs.csr import CSRGraph
 from .layers import LAYER_FNS, EllAdjacency, init_layer
 
+#: set True after the first string-policy shim warning (reset by tests).
+_POLICY_SHIM_WARNED = False
+
+
+def _warn_policy_shim() -> None:
+    """One-time DeprecationWarning for the string-policy execution path."""
+    global _POLICY_SHIM_WARNED
+    if not _POLICY_SHIM_WARNED:
+        _POLICY_SHIM_WARNED = True
+        warnings.warn(
+            "executing from GNNConfig.policy/order/band_size string knobs is "
+            "deprecated; compile a Program with repro.compile(...) or pass an "
+            "explicit ModelSchedule (schedule=...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
 
 @dataclass(frozen=True)
 class GNNConfig:
@@ -29,7 +53,7 @@ class GNNConfig:
     hidden: int = 16  # Kipf-standard hidden width
     n_classes: int = 8
     n_layers: int = 2
-    policy: str = "sp_opt"  # inter-phase dataflow policy (shim; see module doc)
+    policy: str = "sp_opt"  # deprecated shim; see module docstring
     order: str = "AC"  # phase order
     band_size: int = 128
     use_pallas: bool = False  # route kernels through Pallas when lowering
@@ -45,7 +69,8 @@ class GNNConfig:
         return ds
 
     def default_schedule(self) -> ModelSchedule:
-        """The homogeneous ModelSchedule the string knobs stand for."""
+        """The homogeneous ModelSchedule the (deprecated) string knobs
+        stand for; prefer :func:`repro.compile` for new code."""
         return ModelSchedule.from_policies(
             self.policy, self.order, self.dims, band_size=self.band_size
         )
@@ -54,6 +79,25 @@ class GNNConfig:
 def init_gnn(cfg: GNNConfig, rng: jax.Array):
     keys = jax.random.split(rng, cfg.n_layers)
     return [init_layer(cfg.kind, k, fi, fo) for k, (fi, fo) in zip(keys, cfg.dims)]
+
+
+def forward_layers(kind: str, params, adj: EllAdjacency, x: jax.Array,
+                   specs, mesh=None) -> jax.Array:
+    """Run the layer stack under per-layer ExecSpecs (the single forward
+    loop shared by ``gnn_forward`` and ``repro.api.Program.run``)."""
+    fn = LAYER_FNS[kind]
+    h = x
+    for layer, spec in zip(params, specs):
+        h = fn(layer, adj, h, spec=spec, mesh=mesh)
+    return h
+
+
+def masked_xent_loss(logits: jax.Array, labels, mask):
+    """Masked softmax cross-entropy shared by ``gnn_loss`` and
+    ``Program.loss``."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
 
 
 def gnn_forward(
@@ -67,29 +111,29 @@ def gnn_forward(
     """Forward pass under a model-level schedule.
 
     ``schedule`` defaults to the homogeneous schedule constructed from the
-    config's string knobs; pass a mapper-searched
-    :class:`~repro.core.schedule.ModelSchedule` (``search_model`` ->
-    ``lower``) to run each layer under its own dataflow.
+    config's string knobs (the **deprecated** shim path — it warns once);
+    pass a mapper-searched :class:`~repro.core.schedule.ModelSchedule`
+    (``search_model`` -> ``lower``), or better, compile a
+    :class:`repro.api.Program` with :func:`repro.compile`, to run each
+    layer under its own dataflow.
     """
     if schedule is None:
+        _warn_policy_shim()
         schedule = cfg.default_schedule()
     if schedule.n_layers != len(params):
         raise ValueError(
             f"schedule has {schedule.n_layers} layers but params have "
             f"{len(params)}"
         )
-    fn = LAYER_FNS[cfg.kind]
-    h = x
-    for layer, spec in zip(params, schedule.lower(use_pallas=cfg.use_pallas)):
-        h = fn(layer, adj, h, spec=spec, mesh=mesh)
-    return h  # logits (V, n_classes)
+    return forward_layers(
+        cfg.kind, params, adj, x,
+        schedule.lower(use_pallas=cfg.use_pallas), mesh=mesh,
+    )  # logits (V, n_classes)
 
 
 def gnn_loss(cfg: GNNConfig, params, adj, x, labels, mask, schedule=None):
     logits = gnn_forward(cfg, params, adj, x, schedule=schedule)
-    logp = jax.nn.log_softmax(logits)
-    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
-    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return masked_xent_loss(logits, labels, mask)
 
 
 def make_node_classification_task(

@@ -183,15 +183,28 @@ class TestTemplateRoundTrip:
     @pytest.mark.parametrize(
         "bad",
         [
-            "Foo_AC(VtFtNt, VtGtFt)",
-            "Seq_AC(VtFtNt)",
+            # malformed templates
+            "",
+            "garbage",
+            "Foo_AC(VtFtNt, VtGtFt)",  # unknown inter-phase class
+            "Seq_ZZ(VtFtNt, VtGtFt)",  # unknown phase order
+            "Seq_AC(VtFtNt)",  # missing combination spec
+            "Seq_AC(VtFtNt, VtGtFt",  # unbalanced parens
+            "Seq_AC(VtFtNt, VtGtFt) extra",  # trailing garbage
+            # unknown loop dims / bindings
+            "Seq_AC(VtFtXt, VtGtFt)",  # X is not a dim
+            "Seq_AC(VqFtNt, VtGtFt)",  # q is not a binding
+            # wrong loop counts
             "Seq_AC(VtFt, VtGtFt)",
-            "Seq_AC(VtFtXt, VtGtFt)",
             "Seq_AC(VtFtNtNt, VtGtFt)",
+            # bad tile syntax
+            "Seq_AC(Vs(abc)FtNt, VtGtFt)",  # non-integer tile
+            "Seq_AC(Vs()FtNt, VtGtFt)",  # empty tile
+            "Seq_AC(Vs(8FtNt, VtGtFt)",  # unclosed tile paren
         ],
     )
     def test_malformed_rejected(self, bad):
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError, match="parse|malformed"):
             parse_dataflow(bad)
 
     @settings(max_examples=50, deadline=None)
