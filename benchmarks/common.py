@@ -1,11 +1,19 @@
-"""Shared benchmark plumbing: timing + CSV emission."""
+"""Shared benchmark plumbing: timing, CSV emission and the sweep loops the
+fig9-fig13 modules have in common (mapper-chosen skeleton sweeps and the
+batched-vs-scalar hardware-axis speedup measurement)."""
 from __future__ import annotations
 
 import json
 import time
 from pathlib import Path
 
-from repro.core import GNNLayerWorkload
+from repro.core import (
+    GNNLayerWorkload,
+    TABLE5_NAMES,
+    TileStats,
+    named_skeleton,
+    optimize_tiles,
+)
 from repro.graphs import TABLE4, load_dataset
 
 G_HIDDEN = 16  # Kipf-standard GCN hidden width (see EXPERIMENTS.md)
@@ -35,3 +43,52 @@ def emit(rows: list[tuple[str, float, str]]):
 def save_json(name: str, payload):
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     (OUT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=2))
+
+
+def skeleton_sweep(
+    wl,
+    names=TABLE5_NAMES,
+    objective: str = "cycles",
+    pe_splits=(0.25, 0.5, 0.75),
+    tile_stats: TileStats | None = None,
+):
+    """The fig9/10/11 inner loop: mapper-chosen tilings for each skeleton,
+    one shared TileStats ladder per workload.  Yields
+    ``(skeleton_name, MappingResult, us)``; infeasible skeletons are
+    skipped."""
+    ts = tile_stats if tile_stats is not None else TileStats(wl.nnz)
+    for sk in names:
+        try:
+            res, us = timed(
+                optimize_tiles,
+                named_skeleton(sk),
+                wl,
+                objective=objective,
+                pe_splits=pe_splits,
+                tile_stats=ts,
+            )
+        except (RuntimeError, ValueError):
+            continue
+        yield sk, res, us
+
+
+def speedup_entry(batch_us: float, scalar_us: float, n_points: int) -> dict:
+    """Evidence-JSON fragment for a batched-vs-per-point-scalar hw sweep."""
+    return {
+        "batch_us": batch_us,
+        "scalar_us": scalar_us,
+        "hw_points": n_points,
+        "speedup": scalar_us / max(batch_us, 1e-9),
+    }
+
+
+def check_speedup(fig: str, dataset: str, speedup: float, floor: float) -> list[str]:
+    """Wall-clock guard: the batched hw axis must beat the per-point scalar
+    loop by at least ``floor``x.  Returns error strings (caller raises after
+    evidence is saved, so a regression still leaves the JSON behind)."""
+    if speedup < floor:
+        return [
+            f"{fig}/{dataset}: batched hw sweep only {speedup:.1f}x faster "
+            f"than the per-point scalar loop (floor {floor:.0f}x)"
+        ]
+    return []

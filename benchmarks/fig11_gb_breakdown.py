@@ -2,25 +2,14 @@
 Wt/Op/Psum) for Mutag (LEF) and Citeseer (HF)."""
 from __future__ import annotations
 
-from repro.core import TABLE5_NAMES, TileStats, named_skeleton, optimize_tiles
-
-from .common import emit, save_json, timed, workloads
+from .common import emit, save_json, skeleton_sweep, workloads
 
 
 def run():
     rows, table = [], {}
     for name, spec, wl in workloads(["mutag", "citeseer"]):
         table[name] = {}
-        ts = TileStats(wl.nnz)
-        for sk in TABLE5_NAMES:
-            try:
-                res, us = timed(
-                    optimize_tiles, named_skeleton(sk), wl,
-                    objective="cycles", pe_splits=(0.25, 0.5, 0.75),
-                    tile_stats=ts,
-                )
-            except (RuntimeError, ValueError):
-                continue
+        for sk, res, us in skeleton_sweep(wl):
             acc = res.stats.gb_accesses
             table[name][sk] = acc
             top = max(acc, key=acc.get)

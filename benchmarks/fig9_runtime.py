@@ -2,11 +2,7 @@
 across the Table-4 datasets (GCN layer, mapper-chosen tile sizes)."""
 from __future__ import annotations
 
-from repro.core import TABLE5_NAMES, TileStats, named_skeleton, optimize_tiles
-
-from .common import emit, save_json, timed, workloads
-
-SPLITS = (0.25, 0.5, 0.75)
+from .common import emit, save_json, skeleton_sweep, workloads
 
 
 def run(datasets=None):
@@ -14,15 +10,7 @@ def run(datasets=None):
     for name, spec, wl in workloads(datasets):
         base = None
         table[name] = {}
-        ts = TileStats(wl.nnz)
-        for sk in TABLE5_NAMES:
-            try:
-                res, us = timed(
-                    optimize_tiles, named_skeleton(sk), wl,
-                    objective="cycles", pe_splits=SPLITS, tile_stats=ts,
-                )
-            except (RuntimeError, ValueError):
-                continue
+        for sk, res, us in skeleton_sweep(wl):
             cyc = res.stats.cycles
             base = base or cyc
             table[name][sk] = {

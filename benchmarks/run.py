@@ -16,6 +16,7 @@ from . import (
     fig11_gb_breakdown,
     fig12_pe_allocation,
     fig13_bandwidth,
+    hw_codesign,
     mapper_search,
     table3_validation,
     roofline,
@@ -28,6 +29,7 @@ MODULES = {
     "fig11": fig11_gb_breakdown,
     "fig12": fig12_pe_allocation,
     "fig13": fig13_bandwidth,
+    "codesign": hw_codesign,
     "mapper": mapper_search,
     "table3": table3_validation,
     "roofline": roofline,
@@ -53,6 +55,11 @@ def main() -> int:
             rows = mod.run(FAST_DATASETS)
         elif n == "mapper" and args.fast:
             rows = mod.run(FAST_MAPPER_CASES)
+        elif n == "codesign" and args.fast:
+            rows = mod.run(fast=True)
+        elif n in ("fig12", "fig13") and args.fast:
+            # skip the slow scalar-loop baseline (and its speedup guard)
+            rows = mod.run(with_baseline=False)
         else:
             rows = mod.run()
         emit(rows)

@@ -36,8 +36,8 @@ import jax
 import numpy as np
 
 from .core.cost_model import GNNLayerWorkload
-from .core.hw import AcceleratorConfig, DEFAULT_ACCEL
-from .core.mapper import TABLE5_NAMES, search_model
+from .core.hw import AcceleratorConfig, DEFAULT_ACCEL, HWGrid
+from .core.mapper import TABLE5_NAMES, search_model, search_model_codesign
 from .core.registry import get_objective
 from .core.schedule import ModelSchedule, TransitionSpec
 from .core.simulator import (
@@ -127,6 +127,10 @@ class Program:
     #: runtime adjacency binding (set by compile(graph=...) / bind()); not
     #: part of the artifact and never serialized.
     adj: EllAdjacency | None = field(default=None, compare=False, repr=False)
+    #: the hw x objective sweep behind a co-searched Program (one
+    #: (AcceleratorConfig, objective value) pair per HWGrid point, in grid
+    #: order, inf = infeasible); informational, never serialized.
+    codesign: list | None = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if self.kind not in LAYER_FNS:
@@ -305,10 +309,56 @@ def _resolve_workloads(
     return wls, None
 
 
+def _select_hw(
+    objs: list[float], costs, hw_selection: str
+) -> int:
+    """Pick the winning grid point of a co-search.
+
+    ``"objective"`` minimizes the objective outright (ties: cheapest
+    hw-cost proxy); ``"objective_x_cost"`` minimizes objective x
+    (n_pes x gb_bandwidth) — the provisioning-aware knee of the joint
+    Pareto curve.
+    """
+    objs = np.asarray(objs, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    if not np.isfinite(objs).any():
+        raise RuntimeError("no hardware grid point admits a legal mapping")
+    if hw_selection == "objective":
+        key = np.where(np.isfinite(objs), costs, np.inf)
+        order = np.lexsort((key, objs))
+    elif hw_selection == "objective_x_cost":
+        prod = objs * costs
+        order = np.lexsort((objs, prod))
+    else:
+        raise ValueError(
+            f"hw_selection must be 'objective' or 'objective_x_cost', "
+            f"got {hw_selection!r}"
+        )
+    return int(order[0])
+
+
+def _reprice_schedule(schedule, hw, stats):
+    """An explicit schedule handed to compile() may record the hw (and
+    stats, down to the per-layer RunStats) it was originally searched on —
+    or none at all; after re-pricing, every recorded quantity must agree
+    with the chosen config."""
+    if schedule.hw == hw and schedule.stats is stats:
+        return schedule  # fresh from the search on this very hw
+    return replace(
+        schedule,
+        hw=hw,
+        stats=stats,
+        layers=tuple(
+            replace(l, stats=s)
+            for l, s in zip(schedule.layers, stats.layers)
+        ),
+    )
+
+
 def compile(
     target,
     graph: CSRGraph | None = None,
-    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    hw: AcceleratorConfig | HWGrid = DEFAULT_ACCEL,
     *,
     objective: str = "cycles",
     schedule: ModelSchedule | None = None,
@@ -317,6 +367,7 @@ def compile(
     names: tuple[str, ...] = TABLE5_NAMES,
     pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
     top_k: int = 4,
+    hw_selection: str = "objective",
 ) -> Program:
     """Search -> lower -> package: the one entry point over the mapper.
 
@@ -329,17 +380,78 @@ def compile(
     ``schedule`` skips the search (it is validated against the workload
     shapes and priced with :func:`simulate_model` if it carries no stats).
 
+    ``hw`` may be an :class:`~repro.core.hw.HWGrid`: compile then runs the
+    hardware x dataflow co-search (:func:`search_model_codesign` — the
+    model-level DP re-prices transition costs at every grid point, sharing
+    tile caches), picks the winner per ``hw_selection`` and freezes the
+    chosen :class:`AcceleratorConfig` into the Program and its artifact;
+    the full sweep stays inspectable on ``program.codesign``.  With an
+    explicit ``schedule``, the grid re-prices that schedule at every point
+    and picks the hardware the same way.
+
     Returns a frozen :class:`Program`; with ``graph`` given, the program is
     already bound and ``program.run(params, x)`` executes immediately.
     """
     get_objective(objective)
+    if hw_selection not in ("objective", "objective_x_cost"):
+        # fail before any (expensive) search runs
+        raise ValueError(
+            f"hw_selection must be 'objective' or 'objective_x_cost', "
+            f"got {hw_selection!r}"
+        )
     workloads, cfg = _resolve_workloads(target, graph)
     if kind is None:
         kind = cfg.kind if cfg is not None else "gcn"
     if use_pallas is None:
         use_pallas = cfg.use_pallas if cfg is not None else False
 
-    if schedule is None:
+    if schedule is not None:
+        want = [(wl.f_in, wl.g_out) for wl in workloads]
+        have = [(l.f_in, l.f_out) for l in schedule.layers]
+        if want != have:
+            raise ValueError(
+                f"schedule layer shapes {have} do not match the workload "
+                f"shapes {want}"
+            )
+
+    codesign_log = None
+    if isinstance(hw, HWGrid):
+        grid = hw
+        if schedule is None:
+            schedules = search_model_codesign(
+                workloads,
+                grid,
+                objective=objective,
+                names=names,
+                pe_splits=pe_splits,
+                top_k=top_k,
+            )
+            objs = [
+                float("inf") if s is None else s.stats.objective(objective)
+                for s in schedules
+            ]
+            i = _select_hw(objs, grid.hw_cost(), hw_selection)
+            schedule = schedules[i]
+            stats = schedule.stats
+        else:
+            stats_per = []
+            for cfg_i in grid.configs():
+                try:
+                    stats_per.append(
+                        simulate_model(schedule.dataflows, workloads, cfg_i)
+                    )
+                except ValueError:  # e.g. PE budget violated at this point
+                    stats_per.append(None)
+            objs = [
+                float("inf") if s is None else s.objective(objective)
+                for s in stats_per
+            ]
+            i = _select_hw(objs, grid.hw_cost(), hw_selection)
+            stats = stats_per[i]
+        codesign_log = list(zip(grid.configs(), objs))
+        hw = grid.configs()[i]
+        schedule = _reprice_schedule(schedule, hw, stats)
+    elif schedule is None:
         schedule = search_model(
             workloads,
             hw,
@@ -350,17 +462,11 @@ def compile(
         )
         stats = schedule.stats  # priced by the search on this hw
     else:
-        want = [(wl.f_in, wl.g_out) for wl in workloads]
-        have = [(l.f_in, l.f_out) for l in schedule.layers]
-        if want != have:
-            raise ValueError(
-                f"schedule layer shapes {have} do not match the workload "
-                f"shapes {want}"
-            )
-        # an explicit schedule may carry stats priced on a *different* hw
-        # (it does not record which); always re-price on the given one so
-        # the artifact's hw and predicted stats agree.
+        # an explicit schedule may carry stats (and a recorded hw) from a
+        # *different* config; always re-price on the given one so the
+        # artifact's hw, schedule.hw and predicted stats agree.
         stats = simulate_model(schedule.dataflows, workloads, hw)
+        schedule = _reprice_schedule(schedule, hw, stats)
 
     prog = Program(
         schedule=schedule,
@@ -370,5 +476,6 @@ def compile(
         use_pallas=use_pallas,
         fingerprint=workload_fingerprint(workloads),
         stats=stats,
+        codesign=codesign_log,
     )
     return prog.bind(graph) if graph is not None else prog

@@ -10,7 +10,7 @@ from .taxonomy import (
     intra,
     named_dataflow,
 )
-from .hw import AcceleratorConfig, TPUChipConfig, DEFAULT_ACCEL, TPU_V5E
+from .hw import AcceleratorConfig, HWGrid, TPUChipConfig, DEFAULT_ACCEL, TPU_V5E
 from .registry import (
     Objective,
     get_objective,
@@ -53,12 +53,19 @@ from .simulator import (
     validate_workload_chain,
 )
 from .mapper import (
+    CodesignPoint,
+    CodesignResult,
+    FlexibilityReport,
     MappingResult,
     TABLE5_NAMES,
+    flexibility_value,
     optimize_tiles,
     optimize_tiles_topk,
+    search_codesign,
     search_dataflows,
     search_model,
+    search_model_codesign,
+    sweep_pe_splits,
 )
 from .taxonomy import DataflowSkeleton, SkeletonPhase, Cons, named_skeleton, SKELETONS
 from .taxonomy import input_walk, output_walk, parse_dataflow

@@ -1,11 +1,17 @@
 """Hardware abstraction for the spatial-accelerator model (paper Sec. 2.2).
 
 Also carries the TPU-v5e constants used by the roofline analysis in
-:mod:`repro.launch.roofline` so every hardware number lives in one place.
+:mod:`repro.launch.roofline` so every hardware number lives in one place,
+plus :class:`HWGrid` — the broadcastable hardware axis the co-design search
+(:func:`repro.core.mapper.search_codesign`) and the batched simulator
+(:func:`repro.core.simulator.simulate_batch`) sweep.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import itertools
+from dataclasses import dataclass, field, replace
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -33,17 +39,131 @@ class AcceleratorConfig:
     buffer_energy_exponent: float = 0.5
     dram_energy_pj: float = 100.0  # only used when gb_capacity is exceeded
 
-    def buffer_access_energy(self, capacity_bytes: int) -> float:
-        """Energy per access for a buffer of the given capacity (pJ)."""
-        if capacity_bytes <= 0:
-            return self.rf_energy_pj
-        ratio = (capacity_bytes / self.gb_bank_bytes) ** self.buffer_energy_exponent
-        return float(
-            min(
-                max(self.gb_energy_pj * ratio, self.rf_energy_pj),
-                self.dram_energy_pj,
-            )
+    def buffer_access_energy(self, capacity_bytes):
+        """Energy per access for a buffer of the given capacity (pJ).
+
+        Accepts a scalar or a numpy array of capacities (the batched
+        simulator prices whole candidate grids through this one method, so
+        the exponent/clamp can never drift between the scalar and
+        vectorized paths).  Scalar in, ``float`` out; array in, array out.
+        """
+        cap = np.asarray(capacity_bytes, dtype=np.float64)
+        ratio = np.where(cap > 0, cap / self.gb_bank_bytes, 1.0)
+        e = np.minimum(
+            np.maximum(
+                self.gb_energy_pj * ratio**self.buffer_energy_exponent,
+                self.rf_energy_pj,
+            ),
+            self.dram_energy_pj,
         )
+        out = np.where(cap <= 0, self.rf_energy_pj, e)
+        return float(out) if np.ndim(capacity_bytes) == 0 else out
+
+
+DEFAULT_ACCEL = AcceleratorConfig()
+
+
+def _axis(value, name: str) -> tuple:
+    """Coerce a scalar / iterable axis spec to a non-empty tuple."""
+    if value is None or isinstance(value, (int, float)):
+        return (value,)
+    out = tuple(value)
+    if not out:
+        raise ValueError(f"HWGrid axis {name!r} must not be empty")
+    return out
+
+
+@dataclass(frozen=True)
+class HWGrid:
+    """A broadcastable grid of accelerator configurations.
+
+    The cartesian product of the three searchable hardware axes the paper's
+    case studies sweep — PE count (Fig. 12's allocation study runs on top of
+    it), Global-Buffer bandwidth (Fig. 13) and GB capacity — over a shared
+    ``base`` config carrying the energy constants.  Points are enumerated in
+    C order (``n_pes`` major, ``gb_capacity_bytes`` minor); ``configs()``
+    materializes one frozen :class:`AcceleratorConfig` per point and
+    ``columns()`` exposes the per-point arrays the batched simulator
+    broadcasts against the dataflow axis.
+    """
+
+    n_pes: tuple[int, ...] = (DEFAULT_ACCEL.n_pes,)
+    gb_bandwidth: tuple[int, ...] = (DEFAULT_ACCEL.gb_bandwidth,)
+    gb_capacity_bytes: tuple[int | None, ...] = (None,)
+    base: AcceleratorConfig = DEFAULT_ACCEL
+
+    def __post_init__(self):
+        # axes are integral (AcceleratorConfig's fields are ints): coercing
+        # here keeps columns() and configs() pricing the same values
+        def ints(values, name):
+            out = []
+            for v in _axis(values, name):
+                if v != int(v):
+                    raise ValueError(f"{name} must be integral, got {v}")
+                out.append(int(v))
+            return tuple(out)
+
+        object.__setattr__(self, "n_pes", ints(self.n_pes, "n_pes"))
+        object.__setattr__(
+            self, "gb_bandwidth", ints(self.gb_bandwidth, "gb_bandwidth")
+        )
+        object.__setattr__(
+            self,
+            "gb_capacity_bytes",
+            tuple(
+                None if c is None else int(c)
+                for c in _axis(self.gb_capacity_bytes, "gb_capacity_bytes")
+            ),
+        )
+        for p in self.n_pes:
+            if p < 1:
+                raise ValueError(f"n_pes must be >= 1, got {p}")
+        for b in self.gb_bandwidth:
+            if b <= 0:
+                raise ValueError(f"gb_bandwidth must be > 0, got {b}")
+
+    def __len__(self) -> int:
+        return (
+            len(self.n_pes) * len(self.gb_bandwidth) * len(self.gb_capacity_bytes)
+        )
+
+    def __iter__(self):
+        return iter(self.configs())
+
+    def points(self) -> list[tuple[int, int, int | None]]:
+        """(n_pes, gb_bandwidth, gb_capacity_bytes) per grid point."""
+        return list(
+            itertools.product(self.n_pes, self.gb_bandwidth, self.gb_capacity_bytes)
+        )
+
+    def configs(self) -> list[AcceleratorConfig]:
+        """One frozen :class:`AcceleratorConfig` per grid point."""
+        return [
+            replace(self.base, n_pes=int(p), gb_bandwidth=int(b), gb_capacity_bytes=c)
+            for p, b, c in self.points()
+        ]
+
+    def columns(self) -> dict[str, np.ndarray]:
+        """Per-point arrays: ``n_pes`` (int64), ``gb_bw`` (float64) and
+        ``gb_cap`` (float64, ``inf`` where capacity is unconstrained) — the
+        hardware columns :func:`~repro.core.simulator.simulate_batch`
+        broadcasts against the candidate axis."""
+        pts = self.points()
+        return {
+            "n_pes": np.array([p for p, _, _ in pts], dtype=np.int64),
+            "gb_bw": np.array([float(b) for _, b, _ in pts], dtype=np.float64),
+            "gb_cap": np.array(
+                [np.inf if c is None else float(c) for _, _, c in pts],
+                dtype=np.float64,
+            ),
+        }
+
+    def hw_cost(self) -> np.ndarray:
+        """Provisioning-cost proxy per point: ``n_pes * gb_bandwidth``
+        (compute lanes x interconnect wires, the two quantities the paper's
+        case studies trade against dataflow choice)."""
+        pts = self.points()
+        return np.array([float(p) * float(b) for p, b, _ in pts], dtype=np.float64)
 
 
 #: TPU v5e single-chip constants for the roofline model (assignment spec).
@@ -57,5 +177,4 @@ class TPUChipConfig:
     vmem_bytes: int = 128 * 1024 * 1024 // 8  # 16 MiB
 
 
-DEFAULT_ACCEL = AcceleratorConfig()
 TPU_V5E = TPUChipConfig()

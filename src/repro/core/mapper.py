@@ -18,12 +18,12 @@ the original one-candidate-at-a-time loop for cross-checking.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
 from .cost_model import GNNLayerWorkload, TileStats
-from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .hw import AcceleratorConfig, DEFAULT_ACCEL, HWGrid
 from .registry import get_objective, objective_names, objective_value
 from .schedule import LayerSchedule, ModelSchedule
 from .simulator import (
@@ -32,6 +32,7 @@ from .simulator import (
     RunStats,
     _GroupSpec,
     _eval_candidates,
+    expand_hw_columns,
     simulate,
     simulate_batch,
     simulate_model,
@@ -435,6 +436,47 @@ def _optimize_tiles_scalar(
     return best
 
 
+def sweep_pe_splits(
+    skeleton: DataflowSkeleton,
+    wl: GNNLayerWorkload,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    objective: str = "cycles",
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    max_evals: int = 4096,
+    tile_stats: TileStats | None = None,
+) -> dict[float, MappingResult]:
+    """Best mapping *per PP PE split* from one batched evaluation of the
+    whole (tiling x split) grid — the engine behind the paper's Fig. 12
+    load-balancing study.  Splits with no legal tiling are omitted; non-PP
+    skeletons collapse to the single ``0.5`` entry (their phases share all
+    PEs)."""
+    get_objective(objective)
+    cand = _candidate_grid(skeleton, wl, hw, tuple(pe_splits), max_evals)
+    if not cand or len(cand["t_v_a"]) == 0:
+        raise RuntimeError(f"no legal tiling found for {skeleton.name}")
+    ts = tile_stats if tile_stats is not None else TileStats(wl.nnz)
+    spec = _GroupSpec(
+        skeleton.inter, skeleton.order, skeleton.agg.order, skeleton.cmb.order
+    )
+    res = _eval_candidates(spec, cand, wl, hw, ts)
+    obj = objective_value(objective, res["cycles"], res["energy_pj"])
+    obj = np.asarray(obj, dtype=np.float64)
+    obj[~res["legal"]] = np.inf
+    out: dict[float, MappingResult] = {}
+    for s in np.unique(cand["pe_split"]):
+        rows = np.flatnonzero(cand["pe_split"] == s)
+        if len(rows) == 0 or not np.isfinite(obj[rows]).any():
+            continue
+        i = int(rows[np.argmin(obj[rows])])
+        df = _concretize_at(skeleton, cand, i)
+        out[float(s)] = MappingResult(
+            df, simulate(df, wl, hw), skeleton=skeleton.name
+        )
+    if not out:
+        raise RuntimeError(f"no legal tiling found for {skeleton.name}")
+    return out
+
+
 #: The paper's Table 5 evaluation set.
 TABLE5_NAMES = (
     "Seq-Nt",
@@ -492,6 +534,23 @@ def search_dataflows(
 # ---------------------------------------------------------------------------
 
 
+def _tile_stats_cache(caches: dict[int, TileStats] | None = None):
+    """Per-graph :class:`TileStats` memo shared by the multi-workload
+    searches: one ladder per distinct degree vector, keyed by ``id(nnz)``
+    (layers of one model alias the same array).  Returns a ``ts_for(wl)``
+    lookup; pass an existing dict to share ladders across calls (the
+    hw-grid sweeps do)."""
+    store = caches if caches is not None else {}
+
+    def ts_for(wl: GNNLayerWorkload) -> TileStats:
+        key = id(wl.nnz)
+        if key not in store:
+            store[key] = TileStats(wl.nnz)
+        return store[key]
+
+    return ts_for
+
+
 def _dp_assign(
     layer_dfs: list[list[GNNDataflow]],
     layer_obj: list[np.ndarray],
@@ -538,6 +597,7 @@ def search_model(
     pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
     top_k: int = 4,
     shared_dataflow: bool = False,
+    tile_stats_caches: dict[int, TileStats] | None = None,
 ) -> ModelSchedule:
     """End-to-end mapper for a multi-layer GNN (paper Sec. 4.4 composed).
 
@@ -557,7 +617,10 @@ def search_model(
     ``objective`` must be additive across layers: "cycles" or "energy".
     Returns a :class:`ModelSchedule` whose layers carry per-layer
     ``RunStats`` and whose ``stats`` is the end-to-end
-    :class:`~repro.core.simulator.ModelStats`.
+    :class:`~repro.core.simulator.ModelStats`; the schedule records the
+    ``hw`` it was priced on.  ``tile_stats_caches`` (an ``id(nnz) ->
+    TileStats`` dict) lets a hardware-grid sweep share the tile ladders
+    across hw points.
     """
     if not get_objective(objective).additive:
         raise ValueError(
@@ -569,13 +632,7 @@ def search_model(
         raise ValueError("need at least one layer workload")
     validate_workload_chain(workloads)
 
-    caches: dict[int, TileStats] = {}
-
-    def ts_for(wl: GNNLayerWorkload) -> TileStats:
-        key = id(wl.nnz)
-        if key not in caches:
-            caches[key] = TileStats(wl.nnz)
-        return caches[key]
+    ts_for = _tile_stats_cache(tile_stats_caches)
 
     per_layer = [
         search_dataflows(
@@ -628,6 +685,7 @@ def search_model(
         tuple(t.spec for t in best_shared_stats.transitions),
         objective=objective,
         stats=best_shared_stats,
+        hw=hw,
     )
 
     if shared_dataflow:
@@ -663,4 +721,323 @@ def search_model(
         objective=objective,
         stats=stats,
         shared_baseline=shared_schedule,
+        hw=hw,
     )
+
+
+# ---------------------------------------------------------------------------
+# Hardware co-design: dataflow x hardware grid search + value of flexibility
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CodesignPoint:
+    """One hardware grid point of a :func:`search_codesign` sweep."""
+
+    hw: AcceleratorConfig
+    hw_cost: float  # n_pes x gb_bandwidth provisioning proxy
+    objective_total: float  # sum of per-workload best objectives (inf = infeasible)
+    dataflows: list[GNNDataflow | None]  # per-workload winner
+    on_frontier: bool = False
+    #: scalar-oracle pricing of the winners; filled for frontier points only
+    mappings: list[MappingResult] | None = None
+
+    @property
+    def feasible(self) -> bool:
+        return bool(np.isfinite(self.objective_total))
+
+
+@dataclass
+class CodesignResult:
+    """Joint (hardware, dataflow) search result over an :class:`HWGrid`."""
+
+    objective: str
+    grid: HWGrid
+    points: list[CodesignPoint]
+
+    @property
+    def frontier(self) -> list[CodesignPoint]:
+        """The joint Pareto frontier (objective vs hw-cost), cheapest-hw
+        first — the paper's "what does flexibility buy at each provisioning
+        level" curve."""
+        return sorted(
+            (p for p in self.points if p.on_frontier), key=lambda p: p.hw_cost
+        )
+
+    @property
+    def best(self) -> CodesignPoint:
+        """The feasible point with the best objective (ties: cheaper hw)."""
+        feas = [p for p in self.points if p.feasible]
+        if not feas:
+            raise RuntimeError("no feasible hardware point in the grid")
+        return min(feas, key=lambda p: (p.objective_total, p.hw_cost))
+
+
+def _grid_best_per_point(
+    wl: GNNLayerWorkload,
+    grid: HWGrid,
+    objective: str,
+    names: tuple[str, ...],
+    pe_splits: tuple[float, ...],
+    max_evals: int,
+    ts: TileStats,
+) -> tuple[np.ndarray, list[GNNDataflow | None]]:
+    """Best (objective value, concrete dataflow) per hw grid point for one
+    workload.  Hw points sharing an ``n_pes`` also share their candidate
+    tiling grids (the PE budget is what shapes them), so the sweep costs one
+    vectorized ``_eval_candidates`` per (skeleton, distinct n_pes) — the
+    bandwidth / capacity axes ride along as broadcast columns."""
+    cols = grid.columns()
+    n_hw = len(grid)
+    best_obj = np.full(n_hw, np.inf)
+    winners: list[tuple[DataflowSkeleton, dict, int] | None] = [None] * n_hw
+    for npes in np.unique(cols["n_pes"]):
+        sel = np.flatnonzero(cols["n_pes"] == npes)
+        budget_hw = replace(grid.base, n_pes=int(npes))
+        sub_cols = {k: c[sel] for k, c in cols.items()}
+        for name in names:
+            skeleton = named_skeleton(name)
+            cand = _candidate_grid(skeleton, wl, budget_hw, pe_splits, max_evals)
+            if not cand or len(cand["t_v_a"]) == 0:
+                continue
+            spec = _GroupSpec(
+                skeleton.inter,
+                skeleton.order,
+                skeleton.agg.order,
+                skeleton.cmb.order,
+            )
+            res = _eval_candidates(
+                spec, expand_hw_columns(cand, sub_cols), wl, grid.base, ts
+            )
+            obj = np.asarray(
+                objective_value(objective, res["cycles"], res["energy_pj"]),
+                dtype=np.float64,
+            )
+            obj[~res["legal"]] = np.inf
+            obj = obj.reshape(-1, len(sel))
+            arg = np.argmin(obj, axis=0)
+            val = obj[arg, np.arange(len(sel))]
+            for j, h in enumerate(sel):
+                if val[j] < best_obj[h]:
+                    best_obj[h] = val[j]
+                    winners[h] = (skeleton, cand, int(arg[j]))
+    dataflows = [
+        _concretize_at(w[0], w[1], w[2]) if w is not None else None
+        for w in winners
+    ]
+    return best_obj, dataflows
+
+
+def search_codesign(
+    workloads: list[GNNLayerWorkload],
+    hw_grid: HWGrid,
+    objective: str = "edp",
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    max_evals: int = 4096,
+    price_frontier: bool = True,
+) -> CodesignResult:
+    """Joint hardware x dataflow search: price the whole (dataflow x tiling
+    x hw grid) space in vectorized passes and return every grid point with
+    its per-workload best mapping, marking the (objective, hw-cost) Pareto
+    frontier.
+
+    Each hw point's objective is the *suite total* — the sum over
+    ``workloads`` of the best objective a flexible accelerator of that
+    provisioning reaches (dataflow re-chosen per workload, the paper's
+    flexibility premise; :func:`flexibility_value` prices the premise
+    itself).  ``hw_cost`` is the ``n_pes x gb_bandwidth`` proxy from
+    :meth:`HWGrid.hw_cost`.  Frontier points get their winners re-priced
+    through the scalar :func:`~repro.core.simulator.simulate` oracle
+    (``price_frontier=False`` skips that for large grids).
+    """
+    get_objective(objective)
+    if not workloads:
+        raise ValueError("need at least one workload")
+    if not isinstance(hw_grid, HWGrid):
+        raise TypeError(
+            f"hw_grid must be an HWGrid, got {type(hw_grid).__name__} "
+            "(wrap a single AcceleratorConfig's axes: HWGrid(n_pes=..., ...))"
+        )
+
+    ts_for = _tile_stats_cache()
+
+    per_wl = [
+        _grid_best_per_point(
+            wl, hw_grid, objective, names, pe_splits, max_evals, ts_for(wl)
+        )
+        for wl in workloads
+    ]
+    totals = np.sum([obj for obj, _ in per_wl], axis=0)
+    hw_cost = hw_grid.hw_cost()
+    frontier = _pareto_mask(totals, hw_cost, np.isfinite(totals))
+
+    points = []
+    for h, cfg in enumerate(hw_grid.configs()):
+        dfs = [per_wl[w][1][h] for w in range(len(workloads))]
+        pt = CodesignPoint(
+            hw=cfg,
+            hw_cost=float(hw_cost[h]),
+            objective_total=float(totals[h]),
+            dataflows=dfs,
+            on_frontier=bool(frontier[h]),
+        )
+        if pt.on_frontier and price_frontier:
+            pt.mappings = [
+                MappingResult(df, simulate(df, wl, cfg))
+                for df, wl in zip(dfs, workloads)
+            ]
+        points.append(pt)
+    return CodesignResult(objective=objective, grid=hw_grid, points=points)
+
+
+@dataclass
+class FlexibilityReport:
+    """The paper's "value of flexibility", made quantitative: how much a
+    workload-adaptive (flexible) accelerator beats the best *single fixed
+    dataflow* across a workload suite on the same hardware."""
+
+    objective: str
+    hw: AcceleratorConfig
+    #: flexible accelerator: best dataflow re-chosen per workload
+    per_workload: list[MappingResult]
+    #: rigid accelerator: the one dataflow minimizing the suite total,
+    #: priced on every workload
+    fixed: list[MappingResult]
+
+    @property
+    def fixed_dataflow(self) -> GNNDataflow:
+        return self.fixed[0].dataflow
+
+    @property
+    def flexible_total(self) -> float:
+        return sum(r.objective(self.objective) for r in self.per_workload)
+
+    @property
+    def fixed_total(self) -> float:
+        return sum(r.objective(self.objective) for r in self.fixed)
+
+    @property
+    def value(self) -> float:
+        """fixed / flexible objective ratio; >= 1.0 up to the 1e-6
+        scalar/batch oracle-parity tolerance (both sides are picked by
+        batch scores over the same candidate pool, then re-priced through
+        the scalar oracle), > 1.0 exactly when no single dataflow is best
+        for every workload."""
+        return self.fixed_total / max(self.flexible_total, 1e-300)
+
+    @property
+    def win_pct(self) -> float:
+        return (self.value - 1.0) * 100.0
+
+
+def flexibility_value(
+    workloads: list[GNNLayerWorkload],
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    objective: str = "edp",
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    top_k: int = 4,
+) -> FlexibilityReport:
+    """Quantify the value of dataflow flexibility on a workload suite.
+
+    Runs the per-workload Table-5 search, pools every candidate the
+    searches surfaced, and scores the whole pool on every workload with one
+    :func:`~repro.core.simulator.simulate_batch` call per workload (shared
+    :class:`TileStats`).  The *flexible* cost re-picks the pool's best per
+    workload; the *fixed* cost forces the single pool dataflow with the
+    best suite total everywhere — both sides drawn from the same pool, so
+    ``value >= 1`` by construction and the gap is exactly what hardware
+    flexibility buys (cf. VersaGNN's motivation, arXiv:2105.01280).
+    """
+    get_objective(objective)
+    if not workloads:
+        raise ValueError("need at least one workload")
+
+    ts_for = _tile_stats_cache()
+
+    per_search = [
+        search_dataflows(
+            wl,
+            hw,
+            objective=objective,
+            names=names,
+            pe_splits=pe_splits,
+            top_k=top_k,
+            tile_stats=ts_for(wl),
+        )
+        for wl in workloads
+    ]
+    for i, res in enumerate(per_search):
+        if not res:
+            raise RuntimeError(
+                f"no legal mapping found for workload {i} "
+                f"({workloads[i].name or 'unnamed'})"
+            )
+    pool: list[GNNDataflow] = []
+    for res in per_search:
+        for r in res:
+            if r.dataflow not in pool:
+                pool.append(r.dataflow)
+
+    score = np.empty((len(pool), len(workloads)), dtype=np.float64)
+    for w, wl in enumerate(workloads):
+        batch = simulate_batch(pool, wl, hw, tile_stats=ts_for(wl))
+        score[:, w] = batch.masked_objective(objective)
+
+    flex_idx = np.argmin(score, axis=0)  # per-workload pool winner
+    totals = score.sum(axis=1)  # inf wherever illegal on any workload
+    if not np.isfinite(totals).any():
+        raise RuntimeError("no pool dataflow is legal across the whole suite")
+    fixed_idx = int(np.argmin(totals))
+
+    per_workload = [
+        MappingResult(pool[int(i)], simulate(pool[int(i)], wl, hw))
+        for i, wl in zip(flex_idx, workloads)
+    ]
+    fixed = [
+        MappingResult(pool[fixed_idx], simulate(pool[fixed_idx], wl, hw))
+        for wl in workloads
+    ]
+    return FlexibilityReport(
+        objective=objective, hw=hw, per_workload=per_workload, fixed=fixed
+    )
+
+
+def search_model_codesign(
+    workloads: list[GNNLayerWorkload],
+    hw_grid: HWGrid,
+    objective: str = "cycles",
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    top_k: int = 4,
+) -> list[ModelSchedule | None]:
+    """:func:`search_model` at every point of a hardware grid, sharing the
+    per-graph :class:`TileStats` ladders across points.  Transition costs
+    are re-priced inside each point's DP on that point's bandwidth /
+    capacity, so the chosen schedule can change shape with the hardware
+    (e.g. relayouts become affordable at high bandwidth).  One
+    :class:`ModelSchedule` per grid point, in grid order, each recording
+    its ``hw`` — ``None`` where the point admits no legal mapping."""
+    if not isinstance(hw_grid, HWGrid):
+        raise TypeError(
+            f"hw_grid must be an HWGrid, got {type(hw_grid).__name__}"
+        )
+    caches: dict[int, TileStats] = {}
+    out: list[ModelSchedule | None] = []
+    for cfg in hw_grid.configs():
+        try:
+            out.append(
+                search_model(
+                    workloads,
+                    cfg,
+                    objective=objective,
+                    names=names,
+                    pe_splits=pe_splits,
+                    top_k=top_k,
+                    tile_stats_caches=caches,
+                )
+            )
+        except RuntimeError:
+            out.append(None)
+    return out

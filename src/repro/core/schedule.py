@@ -24,9 +24,10 @@ The costed counterpart lives in :mod:`repro.core.simulator`
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import TYPE_CHECKING, Sequence
 
+from .hw import AcceleratorConfig
 from .taxonomy import (
     GNNDataflow,
     InterPhase,
@@ -224,6 +225,10 @@ class ModelSchedule:
     shared_baseline: "ModelSchedule | None" = field(
         default=None, compare=False, repr=False
     )
+    #: the AcceleratorConfig the schedule was searched / priced on (set by
+    #: `search_model`; the hw x dataflow co-search compares schedules by
+    #: it).  Serialized when present; not part of schedule identity.
+    hw: AcceleratorConfig | None = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if not self.layers:
@@ -317,14 +322,14 @@ class ModelSchedule:
 
     # -- (de)serialization ---------------------------------------------------
     def to_json(self, indent: int | None = 2) -> str:
-        return json.dumps(
-            {
-                "objective": self.objective,
-                "layers": [l.to_dict() for l in self.layers],
-                "transitions": [t.to_dict() for t in self.transitions],
-            },
-            indent=indent,
-        )
+        payload = {
+            "objective": self.objective,
+            "layers": [l.to_dict() for l in self.layers],
+            "transitions": [t.to_dict() for t in self.transitions],
+        }
+        if self.hw is not None:
+            payload["hw"] = asdict(self.hw)
+        return json.dumps(payload, indent=indent)
 
     @classmethod
     def from_json(cls, text: str) -> "ModelSchedule":
@@ -333,6 +338,7 @@ class ModelSchedule:
             tuple(LayerSchedule.from_dict(l) for l in d["layers"]),
             tuple(TransitionSpec.from_dict(t) for t in d.get("transitions", [])),
             objective=d.get("objective", "cycles"),
+            hw=AcceleratorConfig(**d["hw"]) if "hw" in d else None,
         )
 
     def __str__(self) -> str:

@@ -31,7 +31,7 @@ from .cost_model import (
     _ceil,
     _tiles_of,
 )
-from .hw import AcceleratorConfig, DEFAULT_ACCEL
+from .hw import AcceleratorConfig, DEFAULT_ACCEL, HWGrid
 from .registry import get_objective, objective_names, objective_value
 from .taxonomy import (
     Binding,
@@ -203,7 +203,6 @@ def simulate(
         df, wl, hw, pe_agg, pe_cmb
     )
     feat = wl.f_in if df.order == PhaseOrder.AC else wl.g_out
-    int_elems = float(wl.v * feat)
     bytes_per = hw.bytes_per_elem
     sp_opt = df.inter == InterPhase.SP and df.is_sp_optimized
 
@@ -222,9 +221,17 @@ def simulate(
         int_uses_gb_bw = False
     elif df.inter == InterPhase.PP:
         int_energy_per_access = hw.buffer_access_energy(int(buffering * bytes_per))
-    elif df.inter == InterPhase.SEQ and hw.gb_capacity_bytes is not None:
-        if int_elems * bytes_per > hw.gb_capacity_bytes:
-            int_energy_per_access = hw.dram_energy_pj
+    # Capacity check: the *live* intermediate footprint is the whole V x F
+    # matrix only for Seq (staged in full between the phases); the pipelined
+    # strategies keep just the chunk in flight (Table 3's buffering) — every
+    # non-fused path spills to DRAM pricing when its own footprint exceeds
+    # the GB capacity.
+    if (
+        not sp_opt
+        and hw.gb_capacity_bytes is not None
+        and buffering * bytes_per > hw.gb_capacity_bytes
+    ):
+        int_energy_per_access = hw.dram_energy_pj
 
     # ---- runtime -----------------------------------------------------------
     def gb_traffic(t: dict[str, float]) -> float:
@@ -345,6 +352,10 @@ class BatchStats:
     :func:`simulate_batch`.  ``legal`` is False where the candidate violates
     its PE budget (or is not pipelineable) — the scalar path raises
     ``ValueError`` there instead.
+
+    When :func:`simulate_batch` is handed an :class:`~repro.core.hw.HWGrid`
+    the arrays are 2-D, shaped ``(n_dataflows, len(grid))`` with the grid's
+    point order along the second axis (``grid`` records which one).
     """
 
     cycles: np.ndarray
@@ -354,6 +365,7 @@ class BatchStats:
     cmb_cycles: np.ndarray
     macs: np.ndarray
     dataflows: list[GNNDataflow] | None = None
+    grid: HWGrid | None = None
 
     def __len__(self) -> int:
         return len(self.cycles)
@@ -380,15 +392,6 @@ def _unique_map(cols: list[np.ndarray], fn) -> np.ndarray:
         (fn(*row) for row in uniq), dtype=np.float64, count=len(uniq)
     )
     return vals[inv]
-
-
-def _buffer_energy_vec(hw: AcceleratorConfig, capacity_bytes: np.ndarray) -> np.ndarray:
-    """Vectorized :meth:`AcceleratorConfig.buffer_access_energy`."""
-    ratio = (capacity_bytes / hw.gb_bank_bytes) ** hw.buffer_energy_exponent
-    e = np.minimum(
-        np.maximum(hw.gb_energy_pj * ratio, hw.rf_energy_pj), hw.dram_energy_pj
-    )
-    return np.where(capacity_bytes <= 0, hw.rf_energy_pj, e)
 
 
 def _pp_closed_form(
@@ -501,7 +504,12 @@ def _eval_candidates(
 
     ``cand`` columns: the six ``TILE_COLUMNS`` plus ``pe_split`` (float),
     ``agg_n_temporal`` / ``cmb_f_temporal`` (reduction-loop bindings) and
-    ``sp_opt`` (bool).  Requires a non-empty workload (V > 0, E > 0).
+    ``sp_opt`` (bool).  The hardware axis is broadcastable: optional
+    ``n_pes`` (int64), ``gb_bw`` (float64) and ``gb_cap`` (float64, ``inf``
+    = unconstrained) columns override the scalar ``hw`` values per
+    candidate, so one call can price a dataflow x hardware grid (``hw``
+    still supplies the shared energy constants).  Requires a non-empty
+    workload (V > 0, E > 0).
     """
     t_v_a = np.asarray(cand["t_v_a"], dtype=np.int64)
     t_n = np.asarray(cand["t_n"], dtype=np.int64)
@@ -511,6 +519,20 @@ def _eval_candidates(
     t_f_c = np.asarray(cand["t_f_c"], dtype=np.int64)
     split = np.asarray(cand["pe_split"], dtype=np.float64)
     n = len(t_v_a)
+
+    # hardware columns (scalar fallbacks broadcast against the candidates)
+    if "n_pes" in cand:
+        n_pes = np.asarray(cand["n_pes"], dtype=np.int64)
+    else:
+        n_pes = hw.n_pes
+    if "gb_bw" in cand:
+        bw = np.asarray(cand["gb_bw"], dtype=np.float64)
+    else:
+        bw = float(hw.gb_bandwidth)
+    if "gb_cap" in cand:
+        gb_cap = np.asarray(cand["gb_cap"], dtype=np.float64)
+    else:
+        gb_cap = np.inf if hw.gb_capacity_bytes is None else float(hw.gb_capacity_bytes)
 
     v = wl.v
     e = float(wl.nnz.sum())
@@ -522,11 +544,13 @@ def _eval_candidates(
     fp_a = t_v_a * t_n * t_f_a
     fp_c = t_v_c * t_g * t_f_c
     if spec.inter == InterPhase.PP:
-        pe_first = np.maximum(1, np.rint(hw.n_pes * split).astype(np.int64))
-        pe_second = np.maximum(1, hw.n_pes - pe_first)
+        pe_first = np.maximum(1, np.rint(n_pes * split).astype(np.int64))
+        pe_second = np.maximum(1, n_pes - pe_first)
         pe_agg, pe_cmb = (pe_first, pe_second) if ac else (pe_second, pe_first)
     else:
-        pe_agg = pe_cmb = np.full(n, hw.n_pes, dtype=np.int64)
+        pe_agg = pe_cmb = np.broadcast_to(
+            np.asarray(n_pes, dtype=np.int64), (n,)
+        )
     legal = (fp_a <= pe_agg) & (fp_c <= pe_cmb)
     if spec.inter in (InterPhase.SP, InterPhase.PP):
         if spec.granularity == Granularity.NONE:
@@ -628,20 +652,19 @@ def _eval_candidates(
 
     bytes_per = hw.bytes_per_elem
     if spec.inter == InterPhase.PP:
-        int_e = _buffer_energy_vec(hw, (2.0 * pel * bytes_per).astype(np.int64))
+        buffering = 2.0 * pel
+        int_e = hw.buffer_access_energy(buffering * bytes_per)
     elif spec.inter == InterPhase.SEQ:
-        val = hw.gb_energy_pj
-        if (
-            hw.gb_capacity_bytes is not None
-            and v * feat * bytes_per > hw.gb_capacity_bytes
-        ):
-            val = hw.dram_energy_pj
-        int_e = np.full(n, val)
+        # Seq stages the whole V x feat intermediate between the phases
+        buffering = np.full(n, float(v) * feat)
+        int_e = np.full(n, hw.gb_energy_pj)
     else:  # SP: optimized variants never move the intermediate
+        buffering = np.where(sp_opt, 0.0, pel)
         int_e = np.where(sp_opt, 0.0, hw.gb_energy_pj)
+    # capacity spill: each strategy's own live footprint (mirrors `simulate`)
+    int_e = np.where(buffering * bytes_per > gb_cap, hw.dram_energy_pj, int_e)
 
     # ---- runtime ---------------------------------------------------------
-    bw = float(hw.gb_bandwidth)
     stall_1 = np.maximum(1.0, first_nonint / np.maximum(bw * first_cycles, 1e-9))
     stall_2 = np.maximum(1.0, second_nonint / np.maximum(bw * second_cycles, 1e-9))
 
@@ -681,7 +704,7 @@ def _eval_candidates(
 def simulate_batch(
     dataflows: list[GNNDataflow],
     wl: GNNLayerWorkload,
-    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    hw: AcceleratorConfig | HWGrid = DEFAULT_ACCEL,
     tile_stats: TileStats | None = None,
 ) -> BatchStats:
     """Vectorized counterpart of :func:`simulate` for a list of candidates.
@@ -691,16 +714,29 @@ def simulate_batch(
     per-workload :class:`TileStats` cache.  Candidates that violate their PE
     budget (or are not pipelineable) come back with ``legal=False`` instead
     of raising, so a whole mapper grid can be scored in one call.
+
+    ``hw`` may be an :class:`~repro.core.hw.HWGrid`: every candidate is
+    then priced at every grid point in the same vectorized pass (the
+    hardware columns broadcast against the dataflow axis) and the returned
+    arrays are 2-D, ``(len(dataflows), len(hw))`` — pinned to 1e-6 oracle
+    parity with scalar :func:`simulate` at every grid point by
+    ``tests/test_codesign.py``.
     """
+    grid = hw if isinstance(hw, HWGrid) else None
+    base = grid.base if grid is not None else hw
+    hw_cols = grid.columns() if grid is not None else None
+    n_hw = len(grid) if grid is not None else None
+
     ts = tile_stats if tile_stats is not None else TileStats(wl.nnz)
     n = len(dataflows)
+    shape = (n,) if n_hw is None else (n, n_hw)
     out = {
-        "cycles": np.zeros(n),
-        "energy_pj": np.zeros(n),
-        "legal": np.zeros(n, dtype=bool),
-        "agg_cycles": np.zeros(n),
-        "cmb_cycles": np.zeros(n),
-        "macs": np.zeros(n),
+        "cycles": np.zeros(shape),
+        "energy_pj": np.zeros(shape),
+        "legal": np.zeros(shape, dtype=bool),
+        "agg_cycles": np.zeros(shape),
+        "cmb_cycles": np.zeros(shape),
+        "macs": np.zeros(shape),
     }
     groups: dict[tuple, list[int]] = {}
     for i, df in enumerate(dataflows):
@@ -728,11 +764,28 @@ def simulate_batch(
                 dtype=bool,
             ),
         }
-        res = _eval_candidates(spec, cand, wl, hw, ts)
+        if n_hw is not None:
+            cand = expand_hw_columns(cand, hw_cols)
+        res = _eval_candidates(spec, cand, wl, base, ts)
         ix = np.asarray(idxs)
         for k in out:
-            out[k][ix] = res[k]
-    return BatchStats(dataflows=list(dataflows), **out)
+            out[k][ix] = res[k] if n_hw is None else res[k].reshape(-1, n_hw)
+    return BatchStats(dataflows=list(dataflows), grid=grid, **out)
+
+
+def expand_hw_columns(
+    cand: dict[str, np.ndarray], hw_cols: dict[str, np.ndarray]
+) -> dict[str, np.ndarray]:
+    """Cross a candidate-column dict with per-hw-point columns: candidates
+    repeat along the (minor) hardware axis, hardware points tile along the
+    candidate axis — flattened row-major so a ``reshape(k, n_hw)`` recovers
+    the (candidate, hw point) grid."""
+    k = len(next(iter(cand.values())))
+    n_hw = len(next(iter(hw_cols.values())))
+    out = {key: np.repeat(col, n_hw) for key, col in cand.items()}
+    for key, col in hw_cols.items():
+        out[key] = np.tile(col, k)
+    return out
 
 
 # ---------------------------------------------------------------------------

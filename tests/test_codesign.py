@@ -1,0 +1,420 @@
+"""Hardware co-design tests: the HWGrid axis through `simulate_batch`
+(dataflow x hw grid oracle parity), `search_codesign` /
+`flexibility_value`, and `repro.compile(hw=HWGrid(...))`."""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import (
+    AcceleratorConfig,
+    GNNLayerWorkload,
+    HWGrid,
+    ModelSchedule,
+    TileStats,
+    flexibility_value,
+    named_dataflow,
+    named_skeleton,
+    optimize_tiles,
+    search_codesign,
+    search_model,
+    search_model_codesign,
+    simulate,
+    simulate_batch,
+    sweep_pe_splits,
+)
+
+RNG = np.random.default_rng(17)
+
+
+def wl_random(v=512, f=64, g=16, max_deg=12, rng=RNG, name=""):
+    nnz = rng.integers(1, max_deg + 1, size=v)
+    nnz[rng.integers(v)] = max_deg * 20  # one evil row
+    return GNNLayerWorkload(nnz, f, g, name=name)
+
+
+def random_dataflows(n, rng, tiles=(1, 2, 4, 8, 16, 32)):
+    names = ["Seq-Nt", "Seq-Ns", "EnGN", "HyGCN", "AWB-GCN", "SP-FsNt-Fs",
+             "SP-VsNt-Vs", "PP-Nt-Vt/sl", "PP-Ns-Vsh", "High-Vs-SP"]
+    out = []
+    while len(out) < n:
+        name = names[rng.integers(len(names))]
+        out.append(named_dataflow(
+            name,
+            T_V_AGG=int(rng.choice(tiles)), T_N=int(rng.choice(tiles)),
+            T_F_AGG=int(rng.choice(tiles)), T_V_CMB=int(rng.choice(tiles)),
+            T_G=int(rng.choice([1, 2, 4, 8])), T_F_CMB=int(rng.choice(tiles)),
+            pe_split=float(rng.choice([0.25, 0.5, 0.75])),
+        ))
+    return out
+
+
+class TestHWGrid:
+    def test_product_enumeration(self):
+        g = HWGrid(n_pes=(128, 512), gb_bandwidth=(64, 256),
+                   gb_capacity_bytes=(None, 4096))
+        assert len(g) == 8
+        cfgs = g.configs()
+        assert len(cfgs) == 8
+        assert cfgs[0] == AcceleratorConfig(n_pes=128, gb_bandwidth=64)
+        # C order: capacity minor, n_pes major
+        assert cfgs[1].gb_capacity_bytes == 4096
+        assert cfgs[-1] == AcceleratorConfig(
+            n_pes=512, gb_bandwidth=256, gb_capacity_bytes=4096
+        )
+
+    def test_scalar_axes_coerce(self):
+        g = HWGrid(n_pes=256, gb_bandwidth=(64, 128))
+        assert g.n_pes == (256,)
+        assert len(g) == 2
+
+    def test_columns_and_cost(self):
+        g = HWGrid(n_pes=(128, 512), gb_bandwidth=(64,),
+                   gb_capacity_bytes=(None, 1024))
+        cols = g.columns()
+        np.testing.assert_array_equal(cols["n_pes"], [128, 128, 512, 512])
+        assert cols["gb_cap"][0] == np.inf and cols["gb_cap"][1] == 1024.0
+        np.testing.assert_array_equal(g.hw_cost(), [8192.0] * 2 + [32768.0] * 2)
+
+    def test_base_carries_energy_constants(self):
+        base = AcceleratorConfig(gb_energy_pj=2.0)
+        g = HWGrid(n_pes=(64,), base=base)
+        assert g.configs()[0].gb_energy_pj == 2.0
+
+    def test_rejects_bad_axes(self):
+        with pytest.raises(ValueError):
+            HWGrid(n_pes=())
+        with pytest.raises(ValueError):
+            HWGrid(n_pes=(0,))
+        with pytest.raises(ValueError):
+            HWGrid(gb_bandwidth=(0,))
+        # fractional axes would be priced differently by columns() (float)
+        # and configs() (AcceleratorConfig ints) — rejected up front
+        with pytest.raises(ValueError):
+            HWGrid(gb_bandwidth=(96.5,))
+        with pytest.raises(ValueError):
+            HWGrid(n_pes=(128.5,))
+
+    def test_float_valued_integral_axes_coerce(self):
+        g = HWGrid(n_pes=(128.0,), gb_bandwidth=(64.0,),
+                   gb_capacity_bytes=(4096.0,))
+        assert g.configs()[0] == AcceleratorConfig(
+            n_pes=128, gb_bandwidth=64, gb_capacity_bytes=4096
+        )
+
+
+class TestBufferEnergySingleSource:
+    """`buffer_access_energy` is the one clamp/exponent implementation for
+    both the scalar and vectorized paths."""
+
+    def test_vectorized_matches_scalar(self):
+        hw = AcceleratorConfig()
+        caps = np.array([0, 1, 512, 4096, 1 << 20, 1 << 28, 1 << 40])
+        vec = hw.buffer_access_energy(caps)
+        for c, e in zip(caps, vec):
+            assert e == pytest.approx(hw.buffer_access_energy(int(c)))
+
+    def test_clamps(self):
+        hw = AcceleratorConfig()
+        assert hw.buffer_access_energy(0) == hw.rf_energy_pj
+        assert hw.buffer_access_energy(1) == hw.rf_energy_pj  # lower clamp
+        assert hw.buffer_access_energy(1 << 50) == hw.dram_energy_pj  # upper
+        assert isinstance(hw.buffer_access_energy(4096), float)
+
+
+class TestGridOracleParity:
+    """`simulate_batch` over a dataflow x hw grid must match the scalar
+    `simulate` oracle to 1e-6 at every grid point — including
+    capacity-exceeded points, tiny PE arrays and bandwidth != n_pes."""
+
+    def test_dataflow_x_hw_grid(self):
+        rng = np.random.default_rng(5)
+        wl = wl_random(v=700, f=96, g=16, rng=rng)
+        dfs = random_dataflows(80, rng)
+        full_bytes = wl.v * wl.f_in * 4
+        grid = HWGrid(
+            n_pes=(8, 64, 512),
+            gb_bandwidth=(16, 512),
+            # None / smaller-than-a-chunk / between chunk and full matrix
+            gb_capacity_bytes=(None, 512, full_bytes // 2),
+        )
+        bs = simulate_batch(dfs, wl, grid)
+        assert bs.cycles.shape == (len(dfs), len(grid))
+        assert bs.grid is grid
+        legal = 0
+        for i, df in enumerate(dfs):
+            for j, cfg in enumerate(grid.configs()):
+                try:
+                    s = simulate(df, wl, cfg)
+                except ValueError:
+                    assert not bs.legal[i, j], (df, cfg)
+                    continue
+                assert bs.legal[i, j], (df, cfg)
+                legal += 1
+                assert bs.cycles[i, j] == pytest.approx(s.cycles, rel=1e-6)
+                assert bs.energy_pj[i, j] == pytest.approx(s.energy_pj, rel=1e-6)
+                assert bs.agg_cycles[i, j] == pytest.approx(s.agg_cycles, rel=1e-6)
+                assert bs.cmb_cycles[i, j] == pytest.approx(s.cmb_cycles, rel=1e-6)
+        # the sample must exercise both capacity sides and small PE arrays
+        assert legal >= 200
+
+    @pytest.mark.parametrize(
+        "hw",
+        [
+            AcceleratorConfig(gb_capacity_bytes=2048),  # widely exceeded
+            AcceleratorConfig(gb_capacity_bytes=1 << 30),  # never exceeded
+            AcceleratorConfig(n_pes=512, gb_bandwidth=32),  # bw != n_pes
+            AcceleratorConfig(n_pes=16, gb_bandwidth=512),  # tiny PE array
+            AcceleratorConfig(n_pes=7, gb_bandwidth=3, gb_capacity_bytes=4096),
+        ],
+        ids=["cap-exceeded", "cap-large", "narrow-bw", "tiny-pes", "odd-all"],
+    )
+    def test_scalar_hw_nondefault(self, hw):
+        """Satellite: oracle parity under non-default AcceleratorConfig
+        (the pre-existing parity tests only exercised DEFAULT_ACCEL)."""
+        rng = np.random.default_rng(23)
+        wl = wl_random(v=400, f=64, g=16, rng=rng)
+        dfs = random_dataflows(60, rng, tiles=(1, 2, 4, 8))
+        bs = simulate_batch(dfs, wl, hw)
+        legal = 0
+        for i, df in enumerate(dfs):
+            try:
+                s = simulate(df, wl, hw)
+            except ValueError:
+                assert not bs.legal[i], df
+                continue
+            assert bs.legal[i], df
+            legal += 1
+            assert bs.cycles[i] == pytest.approx(s.cycles, rel=1e-6)
+            assert bs.energy_pj[i] == pytest.approx(s.energy_pj, rel=1e-6)
+        assert legal >= 5  # tiny PE arrays leave few legal candidates
+
+
+class TestSweepPESplits:
+    def test_matches_per_split_optimize(self):
+        wl = wl_random(v=384, f=48, g=16)
+        ts = TileStats(wl.nnz)
+        sk = named_skeleton("PP-Nt-Vt/sl")
+        splits = (0.25, 0.5, 0.75)
+        per = sweep_pe_splits(sk, wl, objective="cycles", pe_splits=splits,
+                              tile_stats=ts)
+        assert set(per) == set(splits)
+        for s in splits:
+            ref = optimize_tiles(sk, wl, objective="cycles", pe_splits=(s,),
+                                 tile_stats=ts)
+            assert per[s].stats.cycles == pytest.approx(ref.stats.cycles)
+
+    def test_non_pp_collapses_to_single_entry(self):
+        wl = wl_random(v=256)
+        per = sweep_pe_splits(named_skeleton("Seq-Nt"), wl,
+                              pe_splits=(0.25, 0.5, 0.75))
+        assert list(per) == [0.5]
+
+
+class TestSearchCodesign:
+    def setup_method(self):
+        rng = np.random.default_rng(3)
+        self.wls = [
+            wl_random(v=500, f=64, g=16, rng=rng, name="a"),
+            wl_random(v=300, f=16, g=16, max_deg=40, rng=rng, name="b"),
+        ]
+        self.grid = HWGrid(n_pes=(128, 512), gb_bandwidth=(64, 512))
+
+    def test_frontier_is_nondominated_and_spans(self):
+        res = search_codesign(self.wls, self.grid, objective="cycles")
+        assert len(res.points) == len(self.grid)
+        front = res.frontier
+        assert front
+        for p in front:
+            for q in res.points:
+                if not q.feasible:
+                    continue
+                assert not (
+                    q.objective_total <= p.objective_total
+                    and q.hw_cost <= p.hw_cost
+                    and (q.objective_total < p.objective_total
+                         or q.hw_cost < p.hw_cost)
+                )
+        # the global best objective and the cheapest feasible hw are on it
+        assert res.best in front or any(
+            p.objective_total == res.best.objective_total for p in front
+        )
+
+    def test_more_hardware_never_hurts(self):
+        res = search_codesign(self.wls, self.grid, objective="cycles")
+        by_hw = {(p.hw.n_pes, p.hw.gb_bandwidth): p.objective_total
+                 for p in res.points}
+        # 2% slack: max_evals subsampling differs per PE budget, so the
+        # bigger budget's grid can narrowly miss the smaller one's winner
+        assert by_hw[(512, 512)] <= by_hw[(128, 64)] * 1.02
+        assert by_hw[(512, 512)] <= by_hw[(512, 64)] * 1.02
+        assert by_hw[(512, 512)] <= by_hw[(128, 512)] * 1.02
+
+    def test_frontier_mappings_match_oracle(self):
+        res = search_codesign(self.wls, self.grid, objective="cycles")
+        for p in res.frontier:
+            assert p.mappings is not None
+            total = 0.0
+            for m, df in zip(p.mappings, p.dataflows):
+                assert m.dataflow == df
+                total += m.stats.cycles
+            # scalar re-pricing agrees with the vectorized sweep total
+            assert total == pytest.approx(p.objective_total, rel=1e-6)
+
+    def test_point_objective_matches_per_point_search(self):
+        # one grid point must reproduce the plain per-hw search
+        from repro.core import search_dataflows
+
+        res = search_codesign(self.wls, HWGrid(n_pes=(512,),
+                                               gb_bandwidth=(512,)),
+                              objective="cycles")
+        want = sum(
+            search_dataflows(wl, AcceleratorConfig(), objective="cycles")[0]
+            .stats.cycles
+            for wl in self.wls
+        )
+        assert res.points[0].objective_total == pytest.approx(want, rel=1e-6)
+
+    def test_rejects_non_grid(self):
+        with pytest.raises(TypeError):
+            search_codesign(self.wls, AcceleratorConfig())
+
+
+class TestFlexibilityValue:
+    def test_value_at_least_one_and_consistent(self):
+        rng = np.random.default_rng(9)
+        suite = [
+            wl_random(v=500, f=128, g=16, rng=rng, name="hf"),
+            wl_random(v=300, f=16, g=16, max_deg=60, rng=rng, name="he"),
+            wl_random(v=200, f=512, g=8, rng=rng, name="wide"),
+        ]
+        rep = flexibility_value(suite, objective="cycles")
+        assert rep.value >= 1.0 - 1e-6  # scalar/batch oracle-parity slack
+        assert len(rep.per_workload) == len(suite) == len(rep.fixed)
+        # the fixed side really is one dataflow everywhere
+        assert all(m.dataflow == rep.fixed_dataflow for m in rep.fixed)
+        # stats come from the scalar oracle
+        for m, wl in zip(rep.per_workload, suite):
+            assert m.stats.cycles == pytest.approx(
+                simulate(m.dataflow, wl, rep.hw).cycles
+            )
+        # each flexible pick is no worse than the fixed dataflow there
+        for flex, fixed in zip(rep.per_workload, rep.fixed):
+            assert flex.objective("cycles") <= fixed.objective("cycles") * (
+                1 + 1e-9
+            )
+        assert rep.win_pct == pytest.approx((rep.value - 1) * 100)
+
+
+class TestScheduleHW:
+    def test_search_model_records_hw_and_serializes(self):
+        rng = np.random.default_rng(1)
+        nnz = np.maximum(1, rng.poisson(6, size=400))
+        wls = [GNNLayerWorkload(nnz, 64, 16), GNNLayerWorkload(nnz, 16, 8)]
+        hw = AcceleratorConfig(n_pes=256, gb_bandwidth=128)
+        sched = search_model(wls, hw, objective="cycles")
+        assert sched.hw == hw
+        assert sched.shared_baseline.hw == hw
+        rt = ModelSchedule.from_json(sched.to_json())
+        assert rt.hw == hw
+        # hw is not part of identity, and old JSONs (no "hw") still load
+        assert rt == sched
+        d = json.loads(sched.to_json())
+        del d["hw"]
+        legacy = ModelSchedule.from_json(json.dumps(d))
+        assert legacy.hw is None and legacy == sched
+
+    def test_transitions_repriced_per_hw_point(self):
+        rng = np.random.default_rng(2)
+        nnz = np.maximum(1, rng.poisson(6, size=400))
+        wls = [GNNLayerWorkload(nnz, 64, 16), GNNLayerWorkload(nnz, 16, 8)]
+        grid = HWGrid(gb_bandwidth=(64, 512))
+        scheds = search_model_codesign(wls, grid, objective="cycles")
+        assert len(scheds) == 2
+        for sched, cfg in zip(scheds, grid.configs()):
+            assert sched is not None and sched.hw == cfg
+            # stats really were priced on that point's bandwidth
+            from repro.core import simulate_model
+
+            ref = simulate_model(sched.dataflows, wls, cfg)
+            assert sched.stats.cycles == pytest.approx(ref.cycles, rel=1e-9)
+
+
+class TestCompileHWGrid:
+    rng = np.random.default_rng(4)
+    nnz = np.maximum(1, rng.poisson(6, size=500))
+    wls = [GNNLayerWorkload(nnz, 64, 16), GNNLayerWorkload(nnz, 16, 8)]
+    grid = HWGrid(n_pes=(128, 512), gb_bandwidth=(64, 512))
+
+    def test_chosen_hw_lands_in_program_and_artifact(self, tmp_path):
+        prog = repro.compile(self.wls, hw=self.grid, objective="cycles")
+        assert prog.hw in self.grid.configs()
+        assert prog.schedule.hw == prog.hw
+        assert prog.codesign is not None and len(prog.codesign) == len(self.grid)
+        # the winner really is the grid's best objective
+        objs = [o for _, o in prog.codesign]
+        assert prog.stats.objective("cycles") == pytest.approx(min(objs))
+        p = tmp_path / "prog.json"
+        prog.save(p)
+        loaded = repro.Program.load(p)
+        assert loaded.hw == prog.hw
+        assert loaded.schedule.hw == prog.hw
+        assert loaded.to_json() == prog.to_json()  # byte-stable
+
+    def test_beats_or_matches_every_single_point_compile(self):
+        prog = repro.compile(self.wls, hw=self.grid, objective="cycles")
+        for cfg in self.grid.configs():
+            single = repro.compile(self.wls, hw=cfg, objective="cycles")
+            assert prog.stats.cycles <= single.stats.cycles * (1 + 1e-9)
+
+    def test_explicit_schedule_grid_repricing(self):
+        base = repro.compile(self.wls, hw=AcceleratorConfig(),
+                             objective="cycles")
+        prog = repro.compile(self.wls, hw=self.grid, objective="cycles",
+                             schedule=base.schedule)
+        assert prog.hw in self.grid.configs()
+        # the re-priced schedule must record the *chosen* hw and the stats
+        # priced on it, not those from its original search
+        assert prog.schedule.hw == prog.hw
+        assert prog.schedule.stats.cycles == pytest.approx(prog.stats.cycles)
+        rigid = AcceleratorConfig(n_pes=512, gb_bandwidth=64)
+        single = repro.compile(self.wls, hw=rigid, objective="cycles",
+                               schedule=base.schedule)
+        assert single.schedule.hw == rigid
+        # re-pricing a fixed schedule picks the grid's best feasible point
+        from repro.core import simulate_model
+
+        cands = []
+        for cfg in self.grid.configs():
+            try:
+                cands.append(simulate_model(base.schedule.dataflows,
+                                            self.wls, cfg).cycles)
+            except ValueError:  # schedule infeasible at this point
+                continue
+        assert prog.stats.cycles == pytest.approx(min(cands), rel=1e-9)
+
+    def test_statless_schedule_on_same_hw_gets_stats(self):
+        # a deserialized schedule round-trips hw but not stats; compiling
+        # it on that very hw must still attach the re-priced stats
+        base = repro.compile(self.wls, hw=AcceleratorConfig(),
+                             objective="cycles")
+        bare = ModelSchedule.from_json(base.schedule.to_json())
+        assert bare.stats is None and bare.hw == base.hw
+        prog = repro.compile(self.wls, hw=base.hw, objective="cycles",
+                             schedule=bare)
+        assert prog.schedule.stats is not None
+        assert prog.schedule.stats.cycles == pytest.approx(prog.stats.cycles)
+
+    def test_objective_x_cost_selection(self):
+        prog = repro.compile(self.wls, hw=self.grid, objective="cycles",
+                             hw_selection="objective_x_cost")
+        assert prog.hw in self.grid.configs()
+        chosen = prog.stats.objective("cycles") * prog.hw.n_pes * prog.hw.gb_bandwidth
+        for cfg, obj in prog.codesign:
+            if np.isfinite(obj):
+                assert chosen <= obj * cfg.n_pes * cfg.gb_bandwidth * (1 + 1e-9)
+
+    def test_bad_selection_rejected(self):
+        with pytest.raises(ValueError):
+            repro.compile(self.wls, hw=self.grid, hw_selection="nope")

@@ -218,3 +218,67 @@ def test_mapper_finds_legal_mappings(v, f, seed):
         res = optimize_tiles(named_skeleton(name), wl, HW, "edp")
         res.dataflow.validate()
         assert res.stats.cycles > 0
+
+
+class TestGBCapacitySpill:
+    """The gb_capacity check prices each strategy's own *live* intermediate
+    footprint: the whole V x F matrix for Seq, but only the pipelined chunk
+    (Table 3's buffering) for SP-Generic / PP — and charges DRAM energy per
+    intermediate access when that footprint does not fit."""
+
+    wl = wl_random(v=256, f=64, g=16)
+
+    def _int_energy_per_access(self, df, hw):
+        s = simulate(df, self.wl, hw)
+        return s.energy_breakdown["gb_int"] / s.gb_accesses["int"]
+
+    def seq_df(self):
+        return df_seq(T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_G=8, T_F_CMB=8)
+
+    def sp_df(self):
+        # SP-Generic at row granularity: chunk footprint = band x F
+        return named_dataflow("SP-VsNt-Vs", T_V_AGG=8, T_F_AGG=16,
+                              T_V_CMB=8, T_G=8, T_F_CMB=8)
+
+    def pp_df(self):
+        return named_dataflow("PP-Nt-Vt/sl", T_F_AGG=16, T_V_CMB=8, T_G=8)
+
+    def test_seq_spills_when_full_matrix_exceeds_capacity(self):
+        df = self.seq_df()
+        full_bytes = self.wl.v * self.wl.f_in * 4
+        fits = AcceleratorConfig(gb_capacity_bytes=full_bytes)
+        spills = AcceleratorConfig(gb_capacity_bytes=full_bytes - 1)
+        assert self._int_energy_per_access(df, fits) == fits.gb_energy_pj
+        assert self._int_energy_per_access(df, spills) == spills.dram_energy_pj
+
+    def test_sp_generic_footprint_is_the_chunk_not_vxf(self):
+        df = self.sp_df()
+        s = simulate(df, self.wl, AcceleratorConfig())
+        chunk_bytes = int(s.buffering_elems) * 4
+        full_bytes = self.wl.v * self.wl.f_in * 4
+        assert chunk_bytes < full_bytes  # pipelined footprint is a band
+        # capacity between chunk and full matrix: the chunk fits -> GB price
+        mid = AcceleratorConfig(gb_capacity_bytes=chunk_bytes)
+        assert self._int_energy_per_access(df, mid) == mid.gb_energy_pj
+        # smaller than the chunk itself -> DRAM price (this was the
+        # asymmetry: pipelined paths never consulted gb_capacity at all)
+        tiny = AcceleratorConfig(gb_capacity_bytes=chunk_bytes - 1)
+        assert self._int_energy_per_access(df, tiny) == tiny.dram_energy_pj
+
+    def test_pp_pingpong_buffer_spills_only_below_its_own_footprint(self):
+        df = self.pp_df()
+        s = simulate(df, self.wl, AcceleratorConfig())
+        buf_bytes = int(s.buffering_elems) * 4  # 2 x pipelined chunk
+        fits = AcceleratorConfig(gb_capacity_bytes=buf_bytes)
+        assert self._int_energy_per_access(df, fits) == pytest.approx(
+            fits.buffer_access_energy(buf_bytes)
+        )
+        tiny = AcceleratorConfig(gb_capacity_bytes=buf_bytes - 1)
+        assert self._int_energy_per_access(df, tiny) == tiny.dram_energy_pj
+
+    def test_sp_optimized_is_exempt(self):
+        # the fused dataflow never materializes the intermediate at all, so
+        # no capacity (however small) can charge it DRAM traffic
+        df = named_dataflow("EnGN", T_V_AGG=8, T_F_AGG=16, T_V_CMB=8, T_F_CMB=16)
+        s = simulate(df, self.wl, AcceleratorConfig(gb_capacity_bytes=1))
+        assert "int" not in s.gb_accesses
