@@ -18,6 +18,7 @@ from . import (
     fig13_bandwidth,
     hw_codesign,
     mapper_search,
+    serve_gnn,
     table3_validation,
     roofline,
 )
@@ -31,6 +32,7 @@ MODULES = {
     "fig13": fig13_bandwidth,
     "codesign": hw_codesign,
     "mapper": mapper_search,
+    "serve": serve_gnn,
     "table3": table3_validation,
     "roofline": roofline,
 }
@@ -57,6 +59,8 @@ def main() -> int:
             rows = mod.run(FAST_MAPPER_CASES)
         elif n == "codesign" and args.fast:
             rows = mod.run(fast=True)
+        elif n == "serve" and args.fast:
+            rows = mod.run(smoke=True)
         elif n in ("fig12", "fig13") and args.fast:
             # skip the slow scalar-loop baseline (and its speedup guard)
             rows = mod.run(with_baseline=False)

@@ -6,6 +6,6 @@ schedule (or accept one), lower it to executable kernel knobs, and get a
 frozen :class:`repro.api.Program` with ``run``/``loss``/``stats`` and a
 cacheable ``save``/``load`` JSON artifact.
 """
-from .api import Program, compile, workload_fingerprint
+from .api import Program, compile, trace_count, workload_fingerprint
 
-__all__ = ["Program", "compile", "workload_fingerprint"]
+__all__ = ["Program", "compile", "trace_count", "workload_fingerprint"]

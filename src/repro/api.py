@@ -33,6 +33,7 @@ from pathlib import Path
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .core.cost_model import GNNLayerWorkload
@@ -51,6 +52,23 @@ from .gnn.model import GNNConfig, forward_layers, masked_xent_loss
 from .graphs.csr import CSRGraph
 
 PROGRAM_FORMAT = "repro.program/v1"
+
+#: total number of XLA traces taken by Program executables, process-wide.
+#: ``Program.run`` routes through shape-keyed jitted executables, so a
+#: second run on a same-shape input (or a same-shape rebind) must leave
+#: this counter unchanged — tests and the serving engine assert exactly
+#: that.
+_TRACE_COUNT = 0
+
+
+def _note_trace() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def trace_count() -> int:
+    """Process-wide count of XLA traces taken by ``Program.run``."""
+    return _TRACE_COUNT
 
 
 def workload_fingerprint(workloads: Sequence[GNNLayerWorkload]) -> dict:
@@ -131,6 +149,12 @@ class Program:
     #: (AcceleratorConfig, objective value) pair per HWGrid point, in grid
     #: order, inf = infeasible); informational, never serialized.
     codesign: list | None = field(default=None, compare=False, repr=False)
+    #: shape-keyed jitted executables.  ``bind`` shares this dict across
+    #: rebound copies, so serving a stream of same-shape graphs compiles
+    #: once and re-traces never (see ``trace_count``).
+    _exec_cache: dict = field(
+        default_factory=dict, init=False, compare=False, repr=False
+    )
 
     def __post_init__(self):
         if self.kind not in LAYER_FNS:
@@ -156,12 +180,23 @@ class Program:
         return self.schedule.lower(use_pallas=self.use_pallas)
 
     # -- runtime binding ----------------------------------------------------
-    def bind(self, graph: CSRGraph) -> "Program":
+    def bind(self, graph: CSRGraph, pad_degree: int | None = None) -> "Program":
         """Bind a concrete graph: builds the padded-ELL adjacency with the
-        schedule's row grouping.  Returns a new Program (self is frozen)."""
-        return replace(
-            self, adj=EllAdjacency.from_schedule(graph, self.schedule)
+        schedule's row grouping.  Returns a new Program (self is frozen).
+
+        ``pad_degree`` fixes the padded-ELL width (the serving engine pads
+        every micro-batch of a bucket to the same width).  The rebound
+        Program shares this Program's executable cache: rebinding a
+        same-shape graph reuses the compiled executable, zero re-tracing.
+        """
+        bound = replace(
+            self,
+            adj=EllAdjacency.from_schedule(
+                graph, self.schedule, pad_to=pad_degree
+            ),
         )
+        object.__setattr__(bound, "_exec_cache", self._exec_cache)
+        return bound
 
     def _require_adj(self) -> EllAdjacency:
         if self.adj is None:
@@ -180,16 +215,86 @@ class Program:
             for k, (fi, fo) in zip(keys, self.dims)
         ]
 
-    def run(self, params, x: jax.Array, mesh=None) -> jax.Array:
-        """Forward pass under the compiled schedule (logits, shape
-        (V, f_out of the last layer))."""
+    def _executable(
+        self,
+        n_nodes: int,
+        mesh,
+        donate: bool,
+        readout: str | None,
+        num_segments: int | None,
+    ):
+        """The shape-keyed jitted forward.  jit's own cache handles the
+        per-(array shape, dtype) keying; this dict keys the static closure
+        knobs.  ``donate`` donates the feature buffer (serving streams
+        never reuse it), a no-op on backends without donation."""
+        key = (n_nodes, mesh, donate, readout, num_segments)
+        exe = self._exec_cache.get(key)
+        if exe is None:
+            kind, specs = self.kind, self.specs
+
+            def fwd(params, indices, weights, x, segment_ids):
+                _note_trace()
+                adj = EllAdjacency(indices, weights, n_nodes)
+                return forward_layers(
+                    kind, params, adj, x, specs, mesh=mesh,
+                    segment_ids=segment_ids if readout is not None else None,
+                    num_segments=num_segments,
+                    readout=readout or "mean",
+                )
+
+            exe = jax.jit(fwd, donate_argnums=(3,) if donate else ())
+            self._exec_cache[key] = exe
+        return exe
+
+    def run(
+        self,
+        params,
+        x: jax.Array,
+        mesh=None,
+        *,
+        segment_ids=None,
+        num_segments: int | None = None,
+        readout: str | None = None,
+        donate: bool = False,
+    ) -> jax.Array:
+        """Forward pass under the compiled schedule.
+
+        Returns per-node logits of shape (V, f_out of the last layer) — or,
+        with ``segment_ids`` / ``num_segments`` (a batched graph from
+        :mod:`repro.graphs.batching`), the (num_segments, f_out) per-graph
+        ``readout`` (sum | mean | max, default mean).  Any of the three
+        batching kwargs without ``segment_ids`` is an error — there is no
+        per-graph readout of an unbatched run.
+
+        Executables are cached per input shape: the second call on a
+        same-shape input (including a same-shape :meth:`bind`) performs
+        zero re-tracing (see :func:`repro.api.trace_count`).
+        """
         adj = self._require_adj()
         if len(params) != self.n_layers:
             raise ValueError(
                 f"program has {self.n_layers} layers but params have "
                 f"{len(params)}"
             )
-        return forward_layers(self.kind, params, adj, x, self.specs, mesh=mesh)
+        batched = segment_ids is not None
+        if batched and num_segments is None:
+            raise ValueError("segment_ids needs num_segments")
+        if not batched and (num_segments is not None or readout is not None):
+            raise ValueError(
+                "num_segments/readout need segment_ids (a batched graph)"
+            )
+        exe = self._executable(
+            adj.n_nodes,
+            mesh,
+            donate,
+            (readout or "mean") if batched else None,
+            num_segments,
+        )
+        if not batched:
+            segment_ids = jnp.zeros(0, dtype=jnp.int32)  # unused placeholder
+        return exe(
+            params, adj.indices, adj.weights, x, jnp.asarray(segment_ids)
+        )
 
     def loss(self, params, x, labels, mask, mesh=None):
         """Masked softmax cross-entropy over :meth:`run`'s logits."""

@@ -8,5 +8,14 @@ from .layers import (
     init_layer,
     multiphase_matmul,
     sage_layer,
+    segment_readout,
 )
-from .model import GNNConfig, gnn_forward, gnn_loss, init_gnn, make_node_classification_task
+from .model import (
+    GNNConfig,
+    forward_layers,
+    gnn_forward,
+    gnn_loss,
+    init_gnn,
+    make_node_classification_task,
+    masked_xent_loss,
+)

@@ -55,15 +55,29 @@ class EllAdjacency:
     n_nodes: int
 
     @classmethod
-    def from_csr(cls, g: CSRGraph, block_rows: int = 1) -> "EllAdjacency":
-        idx, wts, _ = g.to_ell(block_rows)
+    def from_csr(
+        cls, g: CSRGraph, block_rows: int = 1, pad_to: int | None = None
+    ) -> "EllAdjacency":
+        """``pad_to`` fixes the padded-ELL width D (>= the graph's max
+        degree): batched serving pads every micro-batch of a bucket to the
+        same D so rebinding never changes the device shapes."""
+        if pad_to is not None and pad_to < g.max_degree:
+            raise ValueError(
+                f"pad_to={pad_to} is narrower than the graph's max degree "
+                f"{g.max_degree}; neighbor lists would be truncated"
+            )
+        idx, wts, _ = g.to_ell(block_rows, pad_to=pad_to)
         return cls(jnp.asarray(idx), jnp.asarray(wts), g.n_nodes)
 
     @classmethod
-    def from_schedule(cls, g: CSRGraph, schedule) -> "EllAdjacency":
+    def from_schedule(
+        cls, g: CSRGraph, schedule, pad_to: int | None = None
+    ) -> "EllAdjacency":
         """Build the adjacency with a ModelSchedule's lowered ELL block
         rows, so every layer's band scan walks aligned row groups."""
-        return cls.from_csr(g, block_rows=schedule.ell_block_rows)
+        return cls.from_csr(
+            g, block_rows=schedule.ell_block_rows, pad_to=pad_to
+        )
 
     @property
     def v_pad(self) -> int:
@@ -249,6 +263,42 @@ def multiphase_matmul(
         )
     kernel = lookup_kernel(spec.policy, spec.order, spec.use_pallas)
     return kernel(adj, x, w, spec, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Segment-aware readout (batched serving)
+# ---------------------------------------------------------------------------
+
+READOUTS = ("sum", "mean", "max")
+
+
+def segment_readout(
+    h: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    reduce: str = "mean",
+) -> jax.Array:
+    """Per-graph readout over a block-diagonally batched node output.
+
+    ``h`` is (V, F) node output of a batched forward pass and
+    ``segment_ids[v]`` the member-graph index of row ``v``; returns the
+    (num_segments, F) per-graph reduction.  Pad rows carry an id of
+    ``num_segments`` (out of range), which JAX segment ops drop — so the
+    batch padding never leaks into the readout.
+    """
+    if reduce not in READOUTS:
+        raise ValueError(
+            f"reduce must be one of {READOUTS}, got {reduce!r}"
+        )
+    if reduce == "max":
+        return jax.ops.segment_max(h, segment_ids, num_segments=num_segments)
+    s = jax.ops.segment_sum(h, segment_ids, num_segments=num_segments)
+    if reduce == "sum":
+        return s
+    counts = jax.ops.segment_sum(
+        jnp.ones(h.shape[0], h.dtype), segment_ids, num_segments=num_segments
+    )
+    return s / jnp.maximum(counts, 1.0)[:, None]
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,7 @@ import numpy as np
 
 from ..core.schedule import ModelSchedule
 from ..graphs.csr import CSRGraph
-from .layers import LAYER_FNS, EllAdjacency, init_layer
+from .layers import LAYER_FNS, EllAdjacency, init_layer, segment_readout
 
 #: set True after the first string-policy shim warning (reset by tests).
 _POLICY_SHIM_WARNED = False
@@ -82,13 +82,25 @@ def init_gnn(cfg: GNNConfig, rng: jax.Array):
 
 
 def forward_layers(kind: str, params, adj: EllAdjacency, x: jax.Array,
-                   specs, mesh=None) -> jax.Array:
+                   specs, mesh=None, segment_ids=None, num_segments=None,
+                   readout: str = "mean") -> jax.Array:
     """Run the layer stack under per-layer ExecSpecs (the single forward
-    loop shared by ``gnn_forward`` and ``repro.api.Program.run``)."""
+    loop shared by ``gnn_forward`` and ``repro.api.Program.run``).
+
+    With ``segment_ids`` / ``num_segments`` (a block-diagonally batched
+    graph, see :mod:`repro.graphs.batching`), the per-node logits are
+    reduced per member graph with :func:`repro.gnn.layers.segment_readout`
+    and the result is (num_segments, f_out) — per-graph outputs, not one
+    fused logit matrix.
+    """
     fn = LAYER_FNS[kind]
     h = x
     for layer, spec in zip(params, specs):
         h = fn(layer, adj, h, spec=spec, mesh=mesh)
+    if segment_ids is not None:
+        if num_segments is None:
+            raise ValueError("segment_ids needs num_segments")
+        h = segment_readout(h, segment_ids, num_segments, reduce=readout)
     return h
 
 

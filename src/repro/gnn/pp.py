@@ -17,6 +17,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.6 promotes shard_map to the top level (check_vma arg)
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+except AttributeError:  # jax 0.4/0.5: experimental home, check_rep arg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 def pp_multiphase_matmul(
     adj,
@@ -41,11 +49,14 @@ def pp_multiphase_matmul(
 
     if order == "CA":
         # combination first is a single dense GEMM; pipeline the aggregation
-        # of its output bands instead (AWB-GCN direction).
+        # of its output bands instead (AWB-GCN direction).  sp_generic/CA is
+        # exactly that band scan — routing through the AC path with an
+        # identity W would pay a pointless O(V*G^2) GEMM per band.
         from .layers import multiphase_matmul
 
-        return multiphase_matmul(adj, x @ w, w=jnp.eye(w.shape[1], dtype=w.dtype),
-                                 policy="sp_generic", order="AC")
+        return multiphase_matmul(
+            adj, x, w, policy="sp_generic", order="CA", band_size=band_size
+        )
 
     v_pad = adj.v_pad
     n_bands = -(-v_pad // band_size)
@@ -83,11 +94,11 @@ def pp_multiphase_matmul(
         outs = jax.lax.psum(outs, phase_axis)
         return outs.reshape(n_bands * band_size, g_out)
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         pipelined,
         mesh=mesh,
         in_specs=(P(), P(), P(), P()),
         out_specs=P(),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return shard(idx, wts, x, w)[: adj.n_nodes]

@@ -1,0 +1,202 @@
+"""Bucketized multi-graph batching: many graphs, few compiled shapes.
+
+Real GNN serving traffic is a stream of small graphs (the paper batches
+64/32 graphs per inference, Sec. 5.1.2); a JAX/XLA execution path pays a
+fresh compile for every distinct input shape.  This module is the bridge
+between the two facts:
+
+* :class:`BucketPolicy` — a pow2 padding-bucket router.  Every graph maps
+  to a ``(node_bucket, degree_bucket)`` key; graphs sharing a key batch
+  together and pad to the *same* device shapes, so a whole request stream
+  funnels into a handful of compiled executables.
+* :func:`assemble` — block-diagonal micro-batch assembly
+  (:func:`repro.graphs.csr.block_diagonal` under the hood) that pads the
+  batch with isolated self-loop nodes up to the bucket shape and carries
+  per-graph **segment ids**, so node features, labels, and per-graph
+  readout survive batching (pad rows get segment id ``n_graphs``, which
+  JAX segment ops drop as out-of-range).
+
+The serving loop on top lives in :mod:`repro.runtime.engine`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from .csr import CSRGraph, block_diagonal
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@dataclass(frozen=True)
+class BucketPolicy:
+    """Pow2 padding buckets over (node count, max degree).
+
+    ``min_nodes`` / ``min_degree`` floor the buckets so tiny graphs don't
+    fragment the cache into near-empty shapes; ``max_graphs`` caps the
+    micro-batch (the paper's 64-graph batches).  Slot counts of partial
+    batches round up to a power of two too, so a bucket contributes at
+    most ``log2(max_graphs) + 1`` distinct device shapes.
+    """
+
+    min_nodes: int = 32
+    min_degree: int = 8
+    max_graphs: int = 64
+
+    def node_bucket(self, n_nodes: int) -> int:
+        return max(self.min_nodes, next_pow2(n_nodes))
+
+    def degree_bucket(self, max_degree: int) -> int:
+        return max(self.min_degree, next_pow2(max_degree))
+
+    def bucket_of(self, g: CSRGraph) -> tuple[int, int]:
+        """The (node_bucket, degree_bucket) routing key for one graph."""
+        return self.node_bucket(g.n_nodes), self.degree_bucket(g.max_degree)
+
+    def slot_count(self, n_graphs: int) -> int:
+        """Padded graph-slot count of a micro-batch (pow2, <= max_graphs)."""
+        if n_graphs > self.max_graphs:
+            raise ValueError(
+                f"micro-batch of {n_graphs} graphs exceeds max_graphs="
+                f"{self.max_graphs}"
+            )
+        return min(next_pow2(n_graphs), self.max_graphs)
+
+
+def _pad_graph(n_pad: int) -> CSRGraph:
+    """``n_pad`` isolated self-loop rows (weight 0, so they contribute
+    nothing even before the segment readout drops them)."""
+    return CSRGraph(
+        row_ptr=np.arange(n_pad + 1, dtype=np.int64),
+        col_idx=np.arange(n_pad, dtype=np.int32),
+        values=np.zeros(n_pad, dtype=np.float32),
+        n_nodes=n_pad,
+    )
+
+
+@dataclass(frozen=True)
+class GraphBatch:
+    """One assembled micro-batch: block-diagonal graph + segment ids.
+
+    ``graph`` has exactly ``v_total = node_bucket * slots`` rows (member
+    graphs first, then isolated zero-weight pad rows), so every batch from
+    the same bucket presents identical device shapes.  ``segment_ids[i]``
+    is the member-graph index of row ``i``; pad rows carry ``n_graphs``
+    (out of range for ``num_segments=n_graphs``, hence dropped by
+    ``jax.ops.segment_sum``/``segment_max``).
+    """
+
+    graph: CSRGraph
+    segment_ids: np.ndarray  # (v_total,) int32
+    sizes: np.ndarray  # (n_graphs,) int64 real node counts
+    v_bucket: int  # node bucket each member padded into
+    d_bucket: int  # padded-ELL width every member fits in
+
+    @property
+    def n_graphs(self) -> int:
+        return int(len(self.sizes))
+
+    @property
+    def slots(self) -> int:
+        """Padded graph-slot count (pow2).  Readout over ``slots`` segments
+        keeps the executable shape fixed across batch fill levels; rows
+        n_graphs..slots-1 of the result are pad segments to slice off."""
+        return self.v_total // self.v_bucket
+
+    @property
+    def v_total(self) -> int:
+        return self.graph.n_nodes
+
+    @property
+    def n_pad(self) -> int:
+        return self.v_total - int(self.sizes.sum())
+
+    @property
+    def offsets(self) -> np.ndarray:
+        """Start row of each member graph in the batched node dimension."""
+        return np.concatenate([[0], np.cumsum(self.sizes)[:-1]]).astype(np.int64)
+
+    def batch_features(self, xs: Sequence[np.ndarray]) -> np.ndarray:
+        """Stack per-graph node features into the batched (v_total, F)
+        array (zeros on pad rows)."""
+        if len(xs) != self.n_graphs:
+            raise ValueError(
+                f"batch holds {self.n_graphs} graphs but got {len(xs)} "
+                f"feature arrays"
+            )
+        for x, n in zip(xs, self.sizes):
+            if x.shape[0] != n:
+                raise ValueError(
+                    f"feature array has {x.shape[0]} rows for a "
+                    f"{n}-node graph"
+                )
+        f = xs[0].shape[1]
+        out = np.zeros((self.v_total, f), dtype=np.float32)
+        out[: int(self.sizes.sum())] = np.concatenate(xs, axis=0)
+        return out
+
+    def split_nodes(self, out: np.ndarray) -> list[np.ndarray]:
+        """Slice a batched per-node output back into per-graph arrays
+        (pad rows discarded)."""
+        out = np.asarray(out)
+        return [
+            out[o : o + n]
+            for o, n in zip(self.offsets, self.sizes)
+        ]
+
+
+def assemble(
+    graphs: Sequence[CSRGraph], policy: BucketPolicy = BucketPolicy()
+) -> GraphBatch:
+    """Block-diagonal micro-batch assembly, padded to the bucket shape.
+
+    All members must route to the same :meth:`BucketPolicy.bucket_of` key
+    (that is the router's job); the assembled batch then has exactly
+    ``node_bucket * slot_count`` rows and every neighbor list fits in
+    ``degree_bucket`` padded-ELL slots.
+    """
+    if not graphs:
+        raise ValueError("assemble() needs at least one graph")
+    keys = {policy.bucket_of(g) for g in graphs}
+    if len(keys) > 1:
+        raise ValueError(
+            f"graphs route to different buckets {sorted(keys)}; the router "
+            f"must group a micro-batch into one bucket"
+        )
+    ((v_bucket, d_bucket),) = keys
+    slots = policy.slot_count(len(graphs))
+    v_total = v_bucket * slots
+    sizes = np.array([g.n_nodes for g in graphs], dtype=np.int64)
+    n_pad = v_total - int(sizes.sum())
+    assert n_pad >= 0, "bucket arithmetic cannot under-allocate"
+    members = list(graphs) + ([_pad_graph(n_pad)] if n_pad else [])
+    batched = block_diagonal(members)
+    segment_ids = np.full(v_total, len(graphs), dtype=np.int32)
+    off = 0
+    for i, n in enumerate(sizes):
+        segment_ids[off : off + n] = i
+        off += int(n)
+    return GraphBatch(
+        graph=batched,
+        segment_ids=segment_ids,
+        sizes=sizes,
+        v_bucket=v_bucket,
+        d_bucket=d_bucket,
+    )
+
+
+def bucketize(
+    graphs: Sequence[CSRGraph], policy: BucketPolicy = BucketPolicy()
+) -> dict[tuple[int, int], list[int]]:
+    """Route a stream: bucket key -> indices into ``graphs``, in arrival
+    order.  The engine chunks each bucket's list into ``max_graphs``-sized
+    micro-batches for :func:`assemble`."""
+    routed: dict[tuple[int, int], list[int]] = {}
+    for i, g in enumerate(graphs):
+        routed.setdefault(policy.bucket_of(g), []).append(i)
+    return routed

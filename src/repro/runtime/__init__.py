@@ -1,1 +1,8 @@
+from .engine import (
+    EngineStats,
+    InferenceEngine,
+    ProgramCache,
+    Request,
+    Result,
+)
 from .fault_tolerance import ResilientRunner, StragglerMonitor

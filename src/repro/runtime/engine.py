@@ -1,0 +1,317 @@
+"""Serving runtime: a request stream -> bucketized batches -> compiled Programs.
+
+The executable stack below this module is single-graph: ``repro.compile``
+searches + lowers one :class:`~repro.api.Program` per graph, and every
+distinct input shape costs a fresh XLA compile.  Real GNN serving traffic
+is the opposite shape — many small graphs, few distinct sizes (the paper
+batches 64/32 graphs per inference, Sec. 5.1.2).  The
+:class:`InferenceEngine` turns the stream into batched device work:
+
+1. **Route**: every request's graph maps to a pow2 padding bucket
+   (:class:`repro.graphs.batching.BucketPolicy`).
+2. **Assemble**: up to ``max_graphs`` same-bucket graphs become one
+   block-diagonal micro-batch with per-graph segment ids
+   (:func:`repro.graphs.batching.assemble`), padded so every batch of a
+   bucket presents identical device shapes.
+3. **Compile-or-load**: one Program per (workload fingerprint, bucket, hw)
+   key through an LRU cache — the mapper search and the XLA compile are
+   paid once per bucket, not once per request.
+4. **Execute**: ``Program.run`` with segment readout through shape-keyed
+   jitted executables with donated feature buffers; zero re-tracing after
+   the first batch of a bucket (``repro.trace_count`` asserts it).
+
+The engine reports graphs/sec and p50/p99 request latency
+(:meth:`InferenceEngine.stats`); ``benchmarks/serve_gnn.py`` holds the
+throughput evidence against naive per-graph compile+run.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from collections import OrderedDict
+from dataclasses import asdict, dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..api import Program, compile as _compile
+from ..core.cost_model import GNNLayerWorkload
+from ..core.hw import AcceleratorConfig, DEFAULT_ACCEL
+from ..core.schedule import ModelSchedule
+from ..graphs.batching import BucketPolicy, GraphBatch, assemble, bucketize
+from ..graphs.csr import CSRGraph
+
+
+@dataclass(frozen=True)
+class Request:
+    """One inference request: a graph and its node features."""
+
+    graph: CSRGraph
+    x: np.ndarray  # (n_nodes, f_in) float32
+    rid: int = 0
+
+
+@dataclass(frozen=True)
+class Result:
+    """Per-request output: the ``readout`` vector (f_out,) — or the
+    (n_nodes, f_out) node logits when the engine runs with
+    ``readout=None`` — plus serving metadata."""
+
+    rid: int
+    output: np.ndarray
+    bucket: tuple[int, int]
+    latency_s: float  # wall time of this request's micro-batch
+
+
+@dataclass
+class EngineStats:
+    """Aggregate serving report (graphs/sec + latency percentiles)."""
+
+    n_requests: int
+    n_batches: int
+    n_buckets: int
+    wall_s: float
+    graphs_per_sec: float
+    p50_ms: float
+    p99_ms: float
+    compile_s: float  # mapper search + Program packaging (cold buckets)
+    cache_hits: int
+    cache_misses: int
+    cache_evictions: int
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+class ProgramCache:
+    """LRU over compiled Programs, keyed by (fingerprint, bucket, hw)."""
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._programs: OrderedDict[tuple, Program] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def get(self, key: tuple) -> Program | None:
+        prog = self._programs.get(key)
+        if prog is None:
+            self.misses += 1
+            return None
+        self._programs.move_to_end(key)
+        self.hits += 1
+        return prog
+
+    def put(self, key: tuple, prog: Program) -> None:
+        self._programs[key] = prog
+        self._programs.move_to_end(key)
+        while len(self._programs) > self.capacity:
+            self._programs.popitem(last=False)
+            self.evictions += 1
+
+
+def _chunks(seq: list, size: int):
+    for i in range(0, len(seq), size):
+        yield seq[i : i + size]
+
+
+class InferenceEngine:
+    """Bucketized multi-graph serving over an LRU of compiled Programs.
+
+    One engine serves one model (``dims`` layer shapes + ``params``) under
+    one objective on one accelerator config.  ``schedule`` pins an
+    explicit :class:`~repro.core.schedule.ModelSchedule` for every bucket;
+    by default each bucket's first micro-batch runs the model-level mapper
+    search once and the LRU amortizes it over the stream.
+
+    ``readout`` is the per-graph reduction (``"mean"``/``"sum"``/``"max"``)
+    — or ``None`` to return per-graph node logits instead.
+    """
+
+    def __init__(
+        self,
+        dims: Sequence[tuple[int, int]],
+        params=None,
+        *,
+        kind: str = "gcn",
+        objective: str = "cycles",
+        hw: AcceleratorConfig = DEFAULT_ACCEL,
+        policy: BucketPolicy = BucketPolicy(),
+        schedule: ModelSchedule | None = None,
+        cache_capacity: int = 32,
+        use_pallas: bool = False,
+        readout: str | None = "mean",
+    ):
+        self.dims = [(int(fi), int(fo)) for fi, fo in dims]
+        if not self.dims:
+            raise ValueError("engine needs at least one layer shape")
+        self.params = params
+        self.kind = kind
+        self.objective = objective
+        self.hw = hw
+        self.policy = policy
+        self.schedule = schedule
+        self.use_pallas = use_pallas
+        self.readout = readout
+        self.cache = ProgramCache(cache_capacity)
+        #: searched schedules keyed by (v_bucket, d_bucket): the mapper
+        #: runs once per bucket; slot-count variants of the bucket (partial
+        #: tail batches) reuse the schedule and only pay their XLA compile.
+        self._schedules: dict[tuple[int, int], ModelSchedule] = {}
+        # accumulators behind stats()
+        self._latencies: list[float] = []
+        self._buckets_seen: set[tuple[int, int]] = set()
+        self._n_batches = 0
+        self._wall_s = 0.0
+        self._compile_s = 0.0
+
+    @property
+    def f_in(self) -> int:
+        return self.dims[0][0]
+
+    def init(self, rng: jax.Array):
+        """Initialize (and adopt) model parameters for the served dims."""
+        keys = jax.random.split(rng, len(self.dims))
+        from ..gnn.layers import init_layer
+
+        self.params = [
+            init_layer(self.kind, k, fi, fo)
+            for k, (fi, fo) in zip(keys, self.dims)
+        ]
+        return self.params
+
+    # -- program cache -------------------------------------------------------
+    def _cache_key(self, batch: GraphBatch) -> tuple:
+        return (
+            tuple(self.dims),
+            self.kind,
+            self.objective,
+            self.use_pallas,
+            # v_bucket AND v_total: buckets whose v_bucket * slots products
+            # coincide (e.g. 32x2 and 64x1) must not share a Program
+            (batch.v_bucket, batch.v_total, batch.d_bucket),
+            tuple(sorted(asdict(self.hw).items())),
+        )
+
+    def _program_for(self, batch: GraphBatch) -> Program:
+        """Compile (or load) the bucket's Program.  The mapper searches on
+        the bucket's first micro-batch; later batches of the bucket reuse
+        the schedule *and* the jitted executables (the Program's exec
+        cache is shared across ``bind``)."""
+        key = self._cache_key(batch)
+        prog = self.cache.get(key)
+        if prog is None:
+            t0 = time.perf_counter()
+            bucket = (batch.v_bucket, batch.d_bucket)
+            wls = [
+                GNNLayerWorkload(batch.graph.nnz, fi, fo, name=f"layer{i}")
+                for i, (fi, fo) in enumerate(self.dims)
+            ]
+            prog = _compile(
+                wls,
+                hw=self.hw,
+                objective=self.objective,
+                schedule=self.schedule or self._schedules.get(bucket),
+                kind=self.kind,
+                use_pallas=self.use_pallas,
+            )
+            self._schedules.setdefault(bucket, prog.schedule)
+            self._compile_s += time.perf_counter() - t0
+            self.cache.put(key, prog)
+        return prog
+
+    # -- serving -------------------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> list[Result]:
+        """Serve a slice of the stream: route -> assemble -> run.
+
+        Requests are grouped by bucket and chunked into
+        ``policy.max_graphs``-sized micro-batches; every request's latency
+        is its micro-batch's wall time (bucket-cold compiles included, so
+        the p99 reflects real cold-start behavior).
+        """
+        if self.params is None:
+            raise ValueError(
+                "engine has no params; pass params= or call engine.init(rng)"
+            )
+        t_submit = time.perf_counter()
+        for req in requests:
+            if req.x.shape != (req.graph.n_nodes, self.f_in):
+                raise ValueError(
+                    f"request {req.rid}: features {req.x.shape} do not match "
+                    f"(n_nodes={req.graph.n_nodes}, f_in={self.f_in})"
+                )
+        routed = bucketize([r.graph for r in requests], self.policy)
+
+        results: list[Result | None] = [None] * len(requests)
+        with warnings.catch_warnings():
+            # buffer donation is advisory; CPU warns it off
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            for bucket_key, idxs in routed.items():
+                self._buckets_seen.add(bucket_key)
+                for chunk in _chunks(idxs, self.policy.max_graphs):
+                    t0 = time.perf_counter()
+                    batch = assemble(
+                        [requests[i].graph for i in chunk], self.policy
+                    )
+                    prog = self._program_for(batch)
+                    bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
+                    x = jnp.asarray(
+                        batch.batch_features([requests[i].x for i in chunk])
+                    )
+                    if self.readout is None:
+                        out = bound.run(self.params, x, donate=True)
+                        outs = batch.split_nodes(
+                            np.asarray(jax.block_until_ready(out))
+                        )
+                    else:
+                        # readout over the padded slot count, not n_graphs:
+                        # the executable shape then depends only on the
+                        # bucket, so tail batches at any fill level reuse
+                        # it (pad segments are sliced off below)
+                        out = bound.run(
+                            self.params,
+                            x,
+                            segment_ids=jnp.asarray(batch.segment_ids),
+                            num_segments=batch.slots,
+                            readout=self.readout,
+                            donate=True,
+                        )
+                        out = np.asarray(jax.block_until_ready(out))
+                        outs = list(out[: batch.n_graphs])
+                    dt = time.perf_counter() - t0
+                    self._n_batches += 1
+                    for i, o in zip(chunk, outs):
+                        results[i] = Result(
+                            rid=requests[i].rid,
+                            output=o,
+                            bucket=bucket_key,
+                            latency_s=dt,
+                        )
+                        self._latencies.append(dt)
+        self._wall_s += time.perf_counter() - t_submit
+        return results  # type: ignore[return-value]
+
+    def stats(self) -> EngineStats:
+        """The serving report over everything submitted so far."""
+        lat_ms = np.asarray(self._latencies, dtype=np.float64) * 1e3
+        n = len(self._latencies)
+        return EngineStats(
+            n_requests=n,
+            n_batches=self._n_batches,
+            n_buckets=len(self._buckets_seen),
+            wall_s=self._wall_s,
+            graphs_per_sec=n / self._wall_s if self._wall_s > 0 else 0.0,
+            p50_ms=float(np.percentile(lat_ms, 50)) if n else 0.0,
+            p99_ms=float(np.percentile(lat_ms, 99)) if n else 0.0,
+            compile_s=self._compile_s,
+            cache_hits=self.cache.hits,
+            cache_misses=self.cache.misses,
+            cache_evictions=self.cache.evictions,
+        )
