@@ -33,6 +33,7 @@ MODULES = {
     "codesign": hw_codesign,
     "mapper": mapper_search,
     "serve": serve_gnn,
+    "serve_chaos": serve_gnn,
     "table3": table3_validation,
     "roofline": roofline,
 }
@@ -61,6 +62,8 @@ def main() -> int:
             rows = mod.run(fast=True)
         elif n == "serve" and args.fast:
             rows = mod.run(smoke=True)
+        elif n == "serve_chaos":
+            rows = serve_gnn.run_chaos(smoke=args.fast)
         elif n in ("fig12", "fig13") and args.fast:
             # skip the slow scalar-loop baseline (and its speedup guard)
             rows = mod.run(with_baseline=False)

@@ -1,6 +1,6 @@
 """Serving throughput: the bucketized engine vs naive per-graph compile+run.
 
-    PYTHONPATH=src python -m benchmarks.serve_gnn [--smoke]
+    PYTHONPATH=src python -m benchmarks.serve_gnn [--smoke] [--chaos]
 
 Drives a 500-request synthetic molecule/ego stream (mutag- and
 imdb-bin-structured graphs, Table 4) through
@@ -16,6 +16,16 @@ that the engine beats naive per-graph serving by >= 10x wall-clock on the
 same stream; ``--smoke`` serves a short stream with no JSON / no guard
 (CI lane).  Both modes cross-check engine outputs against the naive
 per-graph outputs to 1e-5.
+
+``--chaos`` runs the fault-isolation lane instead: the same stream with a
+seeded 10% fault mix (NaN / float64 features, broken CSR, oversized
+graphs, sticky per-request kernel faults) through an engine with a
+:class:`~repro.runtime.faults.FaultInjector` attached.  It proves the
+resilience contract under load — ``submit()`` never raises, every fault
+lands as a typed non-``ok`` status, healthy outputs stay **bit-identical**
+to a fault-free run, and the chaos slowdown stays under
+``CHAOS_SLOWDOWN_CEIL`` — and commits
+``experiments/benchmarks/serve_gnn_chaos.json``.
 """
 from __future__ import annotations
 
@@ -28,8 +38,9 @@ import numpy as np
 import repro
 from repro.core import GNNLayerWorkload
 from repro.core.schedule import ModelSchedule
-from repro.graphs import TABLE4, BucketPolicy
+from repro.graphs import TABLE4, BucketPolicy, CSRGraph, from_edges
 from repro.graphs.datasets import make_graph
+from repro.runtime import FaultInjector, FaultRule, RetryPolicy
 from repro.runtime.engine import InferenceEngine, Request
 
 from .common import emit, save_json
@@ -172,14 +183,209 @@ def run(smoke: bool = False):
     return rows
 
 
+# -- chaos lane --------------------------------------------------------------
+#: 10% of the stream is poisoned (one request in CHAOS_FAULT_EVERY, the
+#: five fault classes in rotation), mirroring the fault-injection tests at
+#: benchmark scale.
+N_CHAOS = 1000
+N_CHAOS_SMOKE = 100
+CHAOS_FAULT_EVERY = 10
+#: healthy synthetic graphs top out around 32 nodes (Table 4 mutag /
+#: imdb-bin structure), so a 128-node admission cap only ever rejects the
+#: injected oversized graphs.
+CHAOS_MAX_NODES = 128
+CHAOS_OVERSIZED_NODES = 200
+#: wall-clock ceiling for the chaos stream vs the fault-free run of the
+#: same healthy requests: quarantine solo re-runs and ladder retries may
+#: cost work, but isolation must not collapse throughput.
+CHAOS_SLOWDOWN_CEIL = 5.0
+
+CHAOS_CLASSES = ("nan_features", "float64_features", "broken_csr",
+                 "oversized", "kernel_fault")
+
+
+def _oversized_request(rid: int, rng: np.random.Generator) -> Request:
+    """A ring graph far over the admission cap (rejected before compile)."""
+    n = CHAOS_OVERSIZED_NODES
+    src, dst = np.arange(n), (np.arange(n) + 1) % n
+    g = from_edges(n, np.concatenate([src, dst]), np.concatenate([dst, src]))
+    x = rng.normal(size=(n, DIMS[0][0])).astype(np.float32)
+    return Request(graph=g, x=x, rid=rid)
+
+
+def make_chaos_stream(n: int, seed: int = SEED):
+    """The healthy stream with every CHAOS_FAULT_EVERY-th request poisoned.
+
+    Returns ``(requests, kernel_rids, class_counts)`` — ``kernel_rids``
+    need sticky injector rules; the other classes are malformed payloads.
+    """
+    rng = np.random.default_rng(seed + 1)
+    requests = []
+    kernel_rids: list[int] = []
+    counts = {c: 0 for c in CHAOS_CLASSES}
+    for req in make_stream(n, seed):
+        rid = req.rid
+        if rid % CHAOS_FAULT_EVERY != 0:
+            requests.append(req)
+            continue
+        cls = CHAOS_CLASSES[(rid // CHAOS_FAULT_EVERY) % len(CHAOS_CLASSES)]
+        counts[cls] += 1
+        if cls == "nan_features":
+            x = np.array(req.x, copy=True)
+            x[0, 0] = np.nan
+            req = Request(graph=req.graph, x=x, rid=rid)
+        elif cls == "float64_features":
+            req = Request(graph=req.graph, x=req.x.astype(np.float64), rid=rid)
+        elif cls == "broken_csr":
+            ci = np.array(req.graph.col_idx, copy=True)
+            ci[0] = req.graph.n_nodes + 7  # dangling edge target
+            req = Request(
+                graph=CSRGraph(req.graph.row_ptr, ci, req.graph.values,
+                               req.graph.n_nodes),
+                x=req.x, rid=rid,
+            )
+        elif cls == "oversized":
+            req = _oversized_request(rid, rng)
+        else:  # kernel_fault: payload is healthy, the injector poisons it
+            kernel_rids.append(rid)
+        requests.append(req)
+    return requests, kernel_rids, counts
+
+
+def run_chaos(smoke: bool = False):
+    """The fault-isolation lane: seeded 10% fault mix through an injected
+    engine, checked against a fault-free run of the same healthy stream."""
+    n = N_CHAOS_SMOKE if smoke else N_CHAOS
+    requests, kernel_rids, class_counts = make_chaos_stream(n)
+    poisoned = {r.rid for r in requests if r.rid % CHAOS_FAULT_EVERY == 0}
+    policy = BucketPolicy(max_graphs=64, max_nodes=CHAOS_MAX_NODES)
+
+    injector = FaultInjector(
+        seed=SEED,
+        rules=[FaultRule(kind="exception", rid=r) for r in kernel_rids],
+    )
+    engine = InferenceEngine(
+        DIMS,
+        policy=policy,
+        readout="mean",
+        fault_injector=injector,
+        retry=RetryPolicy(max_retries=1),
+    )
+    params = engine.init(jax.random.PRNGKey(0))
+
+    # reaching the next statement at all IS the headline claim: submit()
+    # never raises for a per-request cause, whatever the mix throws at it
+    results = engine.submit(requests)
+    stats = engine.stats()
+
+    by_status: dict[str, int] = {}
+    for res in results:
+        by_status[res.status] = by_status.get(res.status, 0) + 1
+        if not res.ok and res.error_type is None:
+            raise RuntimeError(
+                f"chaos: rid {res.rid} ended {res.status} without a typed "
+                f"error cause"
+            )
+    n_kernel = len(kernel_rids)
+    n_rejected_exp = len(poisoned) - n_kernel
+    if by_status.get("failed", 0) != n_kernel:
+        raise RuntimeError(
+            f"chaos: {by_status.get('failed', 0)} failed requests, expected "
+            f"exactly the {n_kernel} kernel-poisoned rids"
+        )
+    if by_status.get("rejected", 0) != n_rejected_exp:
+        raise RuntimeError(
+            f"chaos: {by_status.get('rejected', 0)} rejected requests, "
+            f"expected {n_rejected_exp} (malformed + oversized)"
+        )
+    healthy_ok = by_status.get("ok", 0) + by_status.get("degraded", 0)
+    if healthy_ok != n - len(poisoned):
+        raise RuntimeError(
+            f"chaos: {healthy_ok} healthy completions of {n - len(poisoned)} "
+            f"healthy requests — isolation leaked onto healthy neighbors"
+        )
+
+    # fault-free reference over the same healthy requests: outputs must be
+    # bit-identical (block-diagonal batching computes graphs independently,
+    # so neither quarantine solo re-runs nor batch composition may change
+    # a healthy answer)
+    healthy_reqs = [r for r in requests if r.rid not in poisoned]
+    ref_engine = InferenceEngine(
+        DIMS, params, policy=policy, readout="mean",
+        retry=RetryPolicy(max_retries=1),
+    )
+    ref = {res.rid: res for res in ref_engine.submit(healthy_reqs)}
+    ref_stats = ref_engine.stats()
+    n_compared = 0
+    for res in results:
+        if res.rid in poisoned:
+            continue
+        if not np.array_equal(res.output, ref[res.rid].output):
+            raise RuntimeError(
+                f"chaos: rid {res.rid} output differs from the fault-free "
+                f"run — healthy answers must be bit-identical under chaos"
+            )
+        n_compared += 1
+
+    slowdown = stats.wall_s / ref_stats.wall_s if ref_stats.wall_s > 0 else 1.0
+    chaos_us = stats.wall_s / n * 1e6
+    rows = [
+        ("serve/chaos", chaos_us,
+         f"ok={by_status.get('ok', 0)};rejected={by_status.get('rejected', 0)};"
+         f"failed={by_status.get('failed', 0)};"
+         f"degraded={by_status.get('degraded', 0)};"
+         f"solo_retries={stats.n_solo_retries};retries={stats.n_retries};"
+         f"bit_identical={n_compared};slowdown=x{slowdown:.2f}"),
+    ]
+
+    if not smoke:
+        save_json("serve_gnn_chaos", {
+            "stream": {
+                "n_requests": n,
+                "fault_every": CHAOS_FAULT_EVERY,
+                "n_poisoned": len(poisoned),
+                "classes": class_counts,
+                "mix": list(MIX),
+                "dims": [list(d) for d in DIMS],
+                "seed": SEED,
+                "max_nodes_cap": CHAOS_MAX_NODES,
+            },
+            "engine": stats.as_dict(),
+            "statuses": by_status,
+            "injected": injector.counts(),
+            "escaped_exceptions": 0,  # submit() returned; nothing escaped
+            "healthy": {
+                "n": n - len(poisoned),
+                "n_served": healthy_ok,
+                "n_bit_identical": n_compared,
+            },
+            "reference": {
+                "wall_s": ref_stats.wall_s,
+                "graphs_per_sec": ref_stats.graphs_per_sec,
+            },
+            "slowdown_vs_fault_free": slowdown,
+            "slowdown_ceiling": CHAOS_SLOWDOWN_CEIL,
+        })
+        # guard after the evidence lands, same policy as the main lane
+        if slowdown > CHAOS_SLOWDOWN_CEIL:
+            raise RuntimeError(
+                f"chaos: fault isolation cost x{slowdown:.2f} wall-clock vs "
+                f"fault-free (ceiling x{CHAOS_SLOWDOWN_CEIL:.1f})"
+            )
+    return rows
+
+
 def main(argv: list[str] | None = None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="64-request stream, parity-checked, no JSON/guard")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-isolation lane: seeded 10%% fault mix, "
+                         "bit-identical healthy outputs, typed statuses")
     args = ap.parse_args(argv)
-    emit(run(smoke=args.smoke))
+    emit(run_chaos(smoke=args.smoke) if args.chaos else run(smoke=args.smoke))
     return 0
 
 

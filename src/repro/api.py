@@ -198,6 +198,19 @@ class Program:
         object.__setattr__(bound, "_exec_cache", self._exec_cache)
         return bound
 
+    def degraded(self, use_pallas: bool = False) -> "Program":
+        """A tier-twin of this Program with the kernel family switched
+        (``use_pallas``) but the schedule, hardware, stats and adjacency
+        binding unchanged — the serving engine's degradation ladder steps
+        from the Pallas tier to the jnp registry fallback through this
+        without re-running the mapper.  Returns ``self`` when already on
+        the requested tier; the twin gets its own executable cache
+        (different kernels trace different programs).
+        """
+        if bool(use_pallas) == self.use_pallas:
+            return self
+        return replace(self, use_pallas=bool(use_pallas))
+
     def _require_adj(self) -> EllAdjacency:
         if self.adj is None:
             raise ValueError(

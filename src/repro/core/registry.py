@@ -119,7 +119,32 @@ register_objective(
 #: (policy, order, use_pallas) -> callable(adj, x, w, spec, mesh)
 _KERNELS: dict[tuple[str, str, bool], Callable] = {}
 
+#: dispatch wrappers applied (in push order) to every kernel resolved by
+#: :func:`lookup_kernel`.  A hook is ``fn(requested_key, impl) -> impl``:
+#: it sees the *requested* ``(policy, order, use_pallas)`` key — even when
+#: the Pallas->jnp fallback resolved a different entry — and may return a
+#: substitute.  This is the seam the fault-injection harness
+#: (:mod:`repro.runtime.faults`) uses to simulate an execution backend
+#: going down; hooks fire at dispatch (trace) time, so already-jitted
+#: executables are unaffected, exactly like a live backend outage.
+_KERNEL_HOOKS: list[Callable] = []
+
 ORDERS = ("AC", "CA")
+
+
+def push_kernel_hook(hook: Callable) -> Callable:
+    """Install a dispatch wrapper (see ``_KERNEL_HOOKS``); returns it so
+    callers can :func:`pop_kernel_hook` it later."""
+    _KERNEL_HOOKS.append(hook)
+    return hook
+
+
+def pop_kernel_hook(hook: Callable) -> None:
+    """Remove a previously pushed dispatch wrapper (no-op if absent)."""
+    try:
+        _KERNEL_HOOKS.remove(hook)
+    except ValueError:
+        pass
 
 
 def register_kernel(
@@ -155,11 +180,16 @@ def lookup_kernel(policy: str, order: str, use_pallas: bool = False) -> Callable
 
     A missing Pallas variant falls back to the jnp path of the same
     ``(policy, order)`` — e.g. ``sp_generic`` has no Pallas kernel, and
-    ``sp_opt``'s fused kernel only covers the AC order.
+    ``sp_opt``'s fused kernel only covers the AC order.  Installed
+    dispatch hooks (:func:`push_kernel_hook`) wrap the resolved kernel,
+    keyed by the *requested* tuple.
     """
-    for key in ((policy, order, bool(use_pallas)), (policy, order, False)):
+    requested = (policy, order, bool(use_pallas))
+    for key in (requested, (policy, order, False)):
         impl = _KERNELS.get(key)
         if impl is not None:
+            for hook in _KERNEL_HOOKS:
+                impl = hook(requested, impl)
             return impl
     if policy not in kernel_policies():
         raise ValueError(

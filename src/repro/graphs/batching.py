@@ -42,11 +42,35 @@ class BucketPolicy:
     micro-batch (the paper's 64-graph batches).  Slot counts of partial
     batches round up to a power of two too, so a bucket contributes at
     most ``log2(max_graphs) + 1`` distinct device shapes.
+
+    ``max_nodes`` / ``max_degree`` are the explicit oversized-graph caps:
+    a graph beyond either would otherwise silently compile a one-off giant
+    bucket (its own mapper search + XLA trace that nothing else ever
+    reuses).  With a cap set, :meth:`oversized_reason` names the violated
+    limit and the serving engine rejects the request with a typed
+    ``OversizedGraph`` error instead.  ``None`` (the default) keeps the
+    pre-cap behavior: any size is admitted.
     """
 
     min_nodes: int = 32
     min_degree: int = 8
     max_graphs: int = 64
+    max_nodes: int | None = None
+    max_degree: int | None = None
+
+    def oversized_reason(self, g: CSRGraph) -> str | None:
+        """Why ``g`` exceeds the admission caps, or ``None`` if it fits."""
+        if self.max_nodes is not None and g.n_nodes > self.max_nodes:
+            return (
+                f"graph has {g.n_nodes} nodes, over the policy cap "
+                f"max_nodes={self.max_nodes}"
+            )
+        if self.max_degree is not None and g.max_degree > self.max_degree:
+            return (
+                f"graph has max degree {g.max_degree}, over the policy cap "
+                f"max_degree={self.max_degree}"
+            )
+        return None
 
     def node_bucket(self, n_nodes: int) -> int:
         return max(self.min_nodes, next_pow2(n_nodes))

@@ -6,3 +6,22 @@ from .engine import (
     Result,
 )
 from .fault_tolerance import ResilientRunner, StragglerMonitor
+from .faults import COMPILE, FaultInjector, FaultRule, InjectionEvent, kill_pallas
+from .resilience import (
+    STATUS_DEGRADED,
+    STATUS_FAILED,
+    STATUS_OK,
+    STATUS_REJECTED,
+    STATUSES,
+    DeadlineExceeded,
+    EngineOverloaded,
+    InvalidRequest,
+    KernelFault,
+    NumericalFault,
+    OversizedGraph,
+    RetryPolicy,
+    ServingError,
+    Tier,
+    default_ladder,
+    validate_request,
+)

@@ -7,22 +7,39 @@ is the opposite shape — many small graphs, few distinct sizes (the paper
 batches 64/32 graphs per inference, Sec. 5.1.2).  The
 :class:`InferenceEngine` turns the stream into batched device work:
 
-1. **Route**: every request's graph maps to a pow2 padding bucket
+1. **Admit**: every request is validated at the boundary
+   (:func:`repro.runtime.resilience.validate_request` — CSR invariants,
+   float32 features) and checked against the policy's oversized-graph caps
+   and the ``max_inflight_graphs`` load-shedding limit.  A request that
+   fails admission returns a typed ``rejected`` :class:`Result`; it never
+   joins a batch, so it cannot poison healthy neighbors.
+2. **Route**: every admitted request's graph maps to a pow2 padding bucket
    (:class:`repro.graphs.batching.BucketPolicy`).
-2. **Assemble**: up to ``max_graphs`` same-bucket graphs become one
+3. **Assemble**: up to ``max_graphs`` same-bucket graphs become one
    block-diagonal micro-batch with per-graph segment ids
    (:func:`repro.graphs.batching.assemble`), padded so every batch of a
-   bucket presents identical device shapes.
-3. **Compile-or-load**: one Program per (workload fingerprint, bucket, hw)
-   key through an LRU cache — the mapper search and the XLA compile are
-   paid once per bucket, not once per request.
-4. **Execute**: ``Program.run`` with segment readout through shape-keyed
-   jitted executables with donated feature buffers; zero re-tracing after
-   the first batch of a bucket (``repro.trace_count`` asserts it).
+   bucket presents identical device shapes.  Per-request deadlines are
+   enforced here: an expired request fails with ``DeadlineExceeded``
+   instead of occupying a slot.
+4. **Compile-or-load**: one Program per (workload fingerprint, bucket,
+   tier, hw) key through an LRU cache — the mapper search and the XLA
+   compile are paid once per bucket, not once per request.
+5. **Execute with fault isolation**: each micro-batch walks the
+   degradation ladder (:func:`repro.runtime.resilience.default_ladder` —
+   searched+Pallas -> searched+jnp -> default schedule) with bounded
+   retries per tier; non-finite outputs raise instead of returning
+   silently.  A multi-graph batch that faults at every tier is re-run
+   request by request (**solo-retry quarantine**), so one poisoned request
+   fails alone with a typed status while its neighbors still return
+   bit-identical outputs.  ``submit()`` never raises for a per-request
+   cause.
 
-The engine reports graphs/sec and p50/p99 request latency
-(:meth:`InferenceEngine.stats`); ``benchmarks/serve_gnn.py`` holds the
-throughput evidence against naive per-graph compile+run.
+The engine reports graphs/sec, p50/p99 request latency and the full
+resilience ledger — per-status counts, retries, downgrades, straggler
+batches, and an error-taxonomy histogram (:meth:`InferenceEngine.stats`);
+``benchmarks/serve_gnn.py`` holds the throughput evidence (and, under
+``--chaos``, the fault-isolation evidence) against naive per-graph
+compile+run.
 """
 from __future__ import annotations
 
@@ -42,32 +59,75 @@ from ..core.hw import AcceleratorConfig, DEFAULT_ACCEL
 from ..core.schedule import ModelSchedule
 from ..graphs.batching import BucketPolicy, GraphBatch, assemble, bucketize
 from ..graphs.csr import CSRGraph
+from .fault_tolerance import StragglerMonitor
+from .faults import FaultInjector
+from .resilience import (
+    STATUS_DEGRADED,
+    STATUS_FAILED,
+    STATUS_OK,
+    STATUS_REJECTED,
+    DeadlineExceeded,
+    EngineOverloaded,
+    NumericalFault,
+    OversizedGraph,
+    RetryPolicy,
+    ServingError,
+    Tier,
+    as_serving_error,
+    default_ladder,
+    validate_request,
+)
 
 
 @dataclass(frozen=True)
 class Request:
-    """One inference request: a graph and its node features."""
+    """One inference request: a graph and its node features.
+
+    ``deadline_s`` is an optional per-request latency budget, measured
+    from ``submit()`` entry; a request whose deadline has already expired
+    when its micro-batch assembles fails with ``DeadlineExceeded`` instead
+    of occupying batch slots.
+    """
 
     graph: CSRGraph
     x: np.ndarray  # (n_nodes, f_in) float32
     rid: int = 0
+    deadline_s: float | None = None
 
 
 @dataclass(frozen=True)
 class Result:
-    """Per-request output: the ``readout`` vector (f_out,) — or the
-    (n_nodes, f_out) node logits when the engine runs with
-    ``readout=None`` — plus serving metadata."""
+    """Per-request output plus serving metadata.
+
+    ``status`` is the per-request verdict (see
+    :mod:`repro.runtime.resilience`): ``ok`` / ``degraded`` carry an
+    ``output`` (the ``readout`` vector ``(f_out,)`` — or the
+    ``(n_nodes, f_out)`` node logits when the engine runs with
+    ``readout=None``); ``rejected`` / ``failed`` carry ``None`` plus the
+    typed cause in ``error_type`` (taxonomy code) and ``error`` (message).
+    """
 
     rid: int
-    output: np.ndarray
-    bucket: tuple[int, int]
+    output: np.ndarray | None
+    bucket: tuple[int, int] | None
     latency_s: float  # wall time of this request's micro-batch
+    status: str = STATUS_OK
+    error: str | None = None
+    error_type: str | None = None
+    tier: str | None = None  # execution tier that produced the output
+    n_retries: int = 0
+    retry_after_s: float | None = None  # backpressure hint on shed load
+
+    @property
+    def ok(self) -> bool:
+        """True when ``output`` is a served answer (ok or degraded)."""
+        return self.status in (STATUS_OK, STATUS_DEGRADED)
 
 
 @dataclass
 class EngineStats:
-    """Aggregate serving report (graphs/sec + latency percentiles)."""
+    """Aggregate serving report: throughput, latency percentiles, and the
+    resilience ledger (statuses, retries, downgrades, stragglers)."""
 
     n_requests: int
     n_batches: int
@@ -80,6 +140,15 @@ class EngineStats:
     cache_hits: int
     cache_misses: int
     cache_evictions: int
+    n_ok: int = 0
+    n_rejected: int = 0
+    n_failed: int = 0
+    n_degraded: int = 0
+    n_retries: int = 0  # execution attempts repeated after a fault
+    n_downgrades: int = 0  # micro-batches that left their preferred tier
+    n_solo_retries: int = 0  # quarantine re-runs of single requests
+    n_stragglers: int = 0  # micro-batches flagged by the StragglerMonitor
+    errors: dict = field(default_factory=dict)  # taxonomy code -> count
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -109,6 +178,10 @@ class ProgramCache:
         self.hits += 1
         return prog
 
+    def peek(self, key: tuple) -> Program | None:
+        """Non-counting lookup (used to derive tier twins)."""
+        return self._programs.get(key)
+
     def put(self, key: tuple, prog: Program) -> None:
         self._programs[key] = prog
         self._programs.move_to_end(key)
@@ -133,6 +206,22 @@ class InferenceEngine:
 
     ``readout`` is the per-graph reduction (``"mean"``/``"sum"``/``"max"``)
     — or ``None`` to return per-graph node logits instead.
+
+    Resilience knobs:
+
+    * ``retry`` — bounded backoff per ladder tier
+      (:class:`~repro.runtime.resilience.RetryPolicy`);
+    * ``ladder`` — explicit degradation tiers (default:
+      :func:`~repro.runtime.resilience.default_ladder` of ``use_pallas``);
+    * ``max_inflight_graphs`` — admission-control cap per ``submit`` call;
+      excess requests are shed with ``rejected`` + ``retry_after_s``;
+    * ``fault_injector`` — a
+      :class:`~repro.runtime.faults.FaultInjector` consulted at the
+      compile and run boundaries (chaos testing);
+    * ``check_numerics`` — treat non-finite outputs as faults (retried,
+      then ``failed``) instead of returning them silently;
+    * ``monitor`` — per-micro-batch latency
+      :class:`~repro.runtime.fault_tolerance.StragglerMonitor`.
     """
 
     def __init__(
@@ -148,6 +237,12 @@ class InferenceEngine:
         cache_capacity: int = 32,
         use_pallas: bool = False,
         readout: str | None = "mean",
+        retry: RetryPolicy = RetryPolicy(max_retries=2, backoff_s=0.0),
+        ladder: Sequence[Tier] | None = None,
+        max_inflight_graphs: int | None = None,
+        fault_injector: FaultInjector | None = None,
+        check_numerics: bool = True,
+        monitor: StragglerMonitor | None = None,
     ):
         self.dims = [(int(fi), int(fo)) for fi, fo in dims]
         if not self.dims:
@@ -160,6 +255,16 @@ class InferenceEngine:
         self.schedule = schedule
         self.use_pallas = use_pallas
         self.readout = readout
+        self.retry = retry
+        self.ladder = (
+            tuple(ladder) if ladder is not None else default_ladder(use_pallas)
+        )
+        if not self.ladder:
+            raise ValueError("the degradation ladder needs at least one tier")
+        self.max_inflight_graphs = max_inflight_graphs
+        self.injector = fault_injector
+        self.check_numerics = check_numerics
+        self.monitor = monitor if monitor is not None else StragglerMonitor()
         self.cache = ProgramCache(cache_capacity)
         #: searched schedules keyed by (v_bucket, d_bucket): the mapper
         #: runs once per bucket; slot-count variants of the bucket (partial
@@ -168,9 +273,20 @@ class InferenceEngine:
         # accumulators behind stats()
         self._latencies: list[float] = []
         self._buckets_seen: set[tuple[int, int]] = set()
+        self._n_requests = 0
         self._n_batches = 0
         self._wall_s = 0.0
         self._compile_s = 0.0
+        self._status_counts = {s: 0 for s in
+                               (STATUS_OK, STATUS_REJECTED, STATUS_FAILED,
+                                STATUS_DEGRADED)}
+        self._errors: dict[str, int] = {}
+        self._n_retries = 0
+        self._n_downgrades = 0
+        self._n_solo_retries = 0
+        #: per-bucket micro-batch sequence numbers (fault-injection plans
+        #: target (bucket, batch_index); solo-retry batches get their own)
+        self._batch_seq: dict[tuple[int, int], int] = {}
 
     @property
     def f_in(self) -> int:
@@ -188,122 +304,363 @@ class InferenceEngine:
         return self.params
 
     # -- program cache -------------------------------------------------------
-    def _cache_key(self, batch: GraphBatch) -> tuple:
+    def _cache_key(self, batch: GraphBatch, tier: Tier) -> tuple:
         return (
             tuple(self.dims),
             self.kind,
             self.objective,
-            self.use_pallas,
+            (tier.use_pallas, tier.searched),
             # v_bucket AND v_total: buckets whose v_bucket * slots products
             # coincide (e.g. 32x2 and 64x1) must not share a Program
             (batch.v_bucket, batch.v_total, batch.d_bucket),
             tuple(sorted(asdict(self.hw).items())),
         )
 
-    def _program_for(self, batch: GraphBatch) -> Program:
-        """Compile (or load) the bucket's Program.  The mapper searches on
-        the bucket's first micro-batch; later batches of the bucket reuse
-        the schedule *and* the jitted executables (the Program's exec
-        cache is shared across ``bind``)."""
-        key = self._cache_key(batch)
+    def _default_schedule(self) -> ModelSchedule:
+        """The ladder's last rung: a fixed sp_opt/AC schedule that needs
+        no mapper search and no Pallas toolchain."""
+        return ModelSchedule.from_policies("sp_opt", "AC", self.dims)
+
+    def _program_for(self, batch: GraphBatch, tier: Tier) -> Program:
+        """Compile (or load) the bucket's Program for one ladder tier.
+        The mapper searches on the bucket's first micro-batch; later
+        batches of the bucket reuse the schedule *and* the jitted
+        executables (the Program's exec cache is shared across ``bind``).
+        A jnp tier whose Pallas twin is already cached derives from it via
+        :meth:`Program.degraded` instead of recompiling."""
+        key = self._cache_key(batch, tier)
         prog = self.cache.get(key)
         if prog is None:
+            if self.injector is not None:
+                self.injector.on_compile((batch.v_bucket, batch.d_bucket))
             t0 = time.perf_counter()
             bucket = (batch.v_bucket, batch.d_bucket)
-            wls = [
-                GNNLayerWorkload(batch.graph.nnz, fi, fo, name=f"layer{i}")
-                for i, (fi, fo) in enumerate(self.dims)
-            ]
-            prog = _compile(
-                wls,
-                hw=self.hw,
-                objective=self.objective,
-                schedule=self.schedule or self._schedules.get(bucket),
-                kind=self.kind,
-                use_pallas=self.use_pallas,
-            )
-            self._schedules.setdefault(bucket, prog.schedule)
+            twin = None
+            if tier.searched and not tier.use_pallas:
+                pallas_tier = Tier("pallas+searched", True, True)
+                twin = self.cache.peek(self._cache_key(batch, pallas_tier))
+            if twin is not None:
+                prog = twin.degraded(use_pallas=False)
+            else:
+                wls = [
+                    GNNLayerWorkload(batch.graph.nnz, fi, fo, name=f"layer{i}")
+                    for i, (fi, fo) in enumerate(self.dims)
+                ]
+                if tier.searched:
+                    sched = self.schedule or self._schedules.get(bucket)
+                else:
+                    sched = self._default_schedule()
+                prog = _compile(
+                    wls,
+                    hw=self.hw,
+                    objective=self.objective,
+                    schedule=sched,
+                    kind=self.kind,
+                    use_pallas=tier.use_pallas,
+                )
+            if tier.searched:
+                self._schedules.setdefault(bucket, prog.schedule)
             self._compile_s += time.perf_counter() - t0
             self.cache.put(key, prog)
         return prog
 
+    # -- admission -----------------------------------------------------------
+    def _retry_after_hint(self) -> float:
+        """Backpressure hint for shed load: the recent median micro-batch
+        latency (time for one batch worth of queue to drain)."""
+        if not self._latencies:
+            return 0.05
+        recent = self._latencies[-50:]
+        return float(np.median(recent))
+
+    def _admission_error(self, req: Request, n_admitted: int) -> ServingError | None:
+        try:
+            validate_request(req, self.f_in)
+            reason = self.policy.oversized_reason(req.graph)
+            if reason is not None:
+                raise OversizedGraph(f"request {req.rid}: {reason}")
+            if (
+                self.max_inflight_graphs is not None
+                and n_admitted >= self.max_inflight_graphs
+            ):
+                hint = self._retry_after_hint()
+                raise EngineOverloaded(
+                    f"request {req.rid}: engine at max_inflight_graphs="
+                    f"{self.max_inflight_graphs}; retry after {hint:.3f}s",
+                    retry_after_s=hint,
+                )
+        except ServingError as e:
+            return e
+        return None
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _record(self, results: list, pos: int, res: Result,
+                err: ServingError | None = None) -> None:
+        results[pos] = res
+        self._status_counts[res.status] += 1
+        if err is not None:
+            self._errors[err.code] = self._errors.get(err.code, 0) + 1
+
     # -- serving -------------------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> list[Result]:
-        """Serve a slice of the stream: route -> assemble -> run.
+        """Serve a slice of the stream: admit -> route -> assemble -> run.
 
         Requests are grouped by bucket and chunked into
         ``policy.max_graphs``-sized micro-batches; every request's latency
         is its micro-batch's wall time (bucket-cold compiles included, so
         the p99 reflects real cold-start behavior).
+
+        Never raises for a per-request cause: malformed, oversized, shed,
+        expired or faulted requests come back as typed non-``ok``
+        :class:`Result`\\ s while their healthy neighbors are served
+        normally.  (A missing ``params`` is an engine misconfiguration and
+        still raises.)
         """
         if self.params is None:
             raise ValueError(
                 "engine has no params; pass params= or call engine.init(rng)"
             )
         t_submit = time.perf_counter()
-        for req in requests:
-            if req.x.shape != (req.graph.n_nodes, self.f_in):
-                raise ValueError(
-                    f"request {req.rid}: features {req.x.shape} do not match "
-                    f"(n_nodes={req.graph.n_nodes}, f_in={self.f_in})"
-                )
-        routed = bucketize([r.graph for r in requests], self.policy)
-
+        self._n_requests += len(requests)
         results: list[Result | None] = [None] * len(requests)
-        with warnings.catch_warnings():
-            # buffer donation is advisory; CPU warns it off
-            warnings.filterwarnings("ignore", message="Some donated buffers")
-            for bucket_key, idxs in routed.items():
-                self._buckets_seen.add(bucket_key)
-                for chunk in _chunks(idxs, self.policy.max_graphs):
-                    t0 = time.perf_counter()
-                    batch = assemble(
-                        [requests[i].graph for i in chunk], self.policy
-                    )
-                    prog = self._program_for(batch)
-                    bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
-                    x = jnp.asarray(
-                        batch.batch_features([requests[i].x for i in chunk])
-                    )
-                    if self.readout is None:
-                        out = bound.run(self.params, x, donate=True)
-                        outs = batch.split_nodes(
-                            np.asarray(jax.block_until_ready(out))
+
+        admitted: list[int] = []
+        for pos, req in enumerate(requests):
+            err = self._admission_error(req, len(admitted))
+            if err is None:
+                admitted.append(pos)
+            else:
+                self._record(
+                    results,
+                    pos,
+                    Result(
+                        rid=req.rid,
+                        output=None,
+                        bucket=None,
+                        latency_s=time.perf_counter() - t_submit,
+                        status=err.status,
+                        error=str(err),
+                        error_type=err.code,
+                        retry_after_s=getattr(err, "retry_after_s", None),
+                    ),
+                    err,
+                )
+
+        if admitted:
+            routed = bucketize(
+                [requests[i].graph for i in admitted], self.policy
+            )
+            with warnings.catch_warnings():
+                # buffer donation is advisory; CPU warns it off
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers"
+                )
+                for bucket_key, local_idxs in routed.items():
+                    self._buckets_seen.add(bucket_key)
+                    idxs = [admitted[j] for j in local_idxs]
+                    for chunk in _chunks(idxs, self.policy.max_graphs):
+                        live = self._enforce_deadlines(
+                            requests, chunk, bucket_key, t_submit, results
                         )
-                    else:
-                        # readout over the padded slot count, not n_graphs:
-                        # the executable shape then depends only on the
-                        # bucket, so tail batches at any fill level reuse
-                        # it (pad segments are sliced off below)
-                        out = bound.run(
-                            self.params,
-                            x,
-                            segment_ids=jnp.asarray(batch.segment_ids),
-                            num_segments=batch.slots,
-                            readout=self.readout,
-                            donate=True,
-                        )
-                        out = np.asarray(jax.block_until_ready(out))
-                        outs = list(out[: batch.n_graphs])
-                    dt = time.perf_counter() - t0
-                    self._n_batches += 1
-                    for i, o in zip(chunk, outs):
-                        results[i] = Result(
-                            rid=requests[i].rid,
-                            output=o,
-                            bucket=bucket_key,
-                            latency_s=dt,
-                        )
-                        self._latencies.append(dt)
+                        if live:
+                            self._serve_batch(
+                                requests, live, bucket_key, results
+                            )
         self._wall_s += time.perf_counter() - t_submit
         return results  # type: ignore[return-value]
+
+    def _enforce_deadlines(
+        self, requests, chunk, bucket_key, t_submit, results
+    ) -> list[int]:
+        """Deadline check at batch-assembly time: expired requests fail
+        with ``DeadlineExceeded`` and free their batch slots."""
+        live = []
+        for i in chunk:
+            dl = requests[i].deadline_s
+            elapsed = time.perf_counter() - t_submit
+            if dl is not None and elapsed > dl:
+                err = DeadlineExceeded(
+                    f"request {requests[i].rid}: deadline {dl:.3f}s expired "
+                    f"({elapsed:.3f}s elapsed) before batch assembly"
+                )
+                self._record(
+                    results,
+                    i,
+                    Result(
+                        rid=requests[i].rid,
+                        output=None,
+                        bucket=bucket_key,
+                        latency_s=elapsed,
+                        status=STATUS_FAILED,
+                        error=str(err),
+                        error_type=err.code,
+                    ),
+                    err,
+                )
+            else:
+                live.append(i)
+        return live
+
+    def _serve_batch(
+        self,
+        requests: Sequence[Request],
+        idxs: list[int],
+        bucket_key: tuple[int, int],
+        results: list,
+        solo: bool = False,
+    ) -> None:
+        """Assemble and execute one micro-batch down the ladder; on a
+        whole-batch fault, quarantine by re-running each member solo."""
+        t0 = time.perf_counter()
+        batch = assemble([requests[i].graph for i in idxs], self.policy)
+        xs = [requests[i].x for i in idxs]
+        rids = [requests[i].rid for i in idxs]
+        batch_index = self._batch_seq.get(bucket_key, 0)
+        self._batch_seq[bucket_key] = batch_index + 1
+
+        outs, tier_idx, n_retries, err = self._execute_ladder(
+            batch, xs, rids, bucket_key, batch_index
+        )
+        dt = time.perf_counter() - t0
+        self._n_batches += 1
+        if solo:
+            self._n_solo_retries += 1
+        self.monitor.record(self._n_batches, dt)
+
+        if err is not None:
+            if len(idxs) > 1:
+                # the batch is poisoned but we don't know by whom: re-run
+                # every member alone so the poison fails solo and healthy
+                # neighbors still get served (bit-identical outputs — the
+                # block-diagonal batch computes each graph independently)
+                for i in idxs:
+                    self._serve_batch(
+                        requests, [i], bucket_key, results, solo=True
+                    )
+                return
+            self._latencies.append(dt)
+            self._record(
+                results,
+                idxs[0],
+                Result(
+                    rid=rids[0],
+                    output=None,
+                    bucket=bucket_key,
+                    latency_s=dt,
+                    status=err.status,
+                    error=str(err),
+                    error_type=err.code,
+                    n_retries=n_retries,
+                ),
+                err,
+            )
+            return
+
+        tier = self.ladder[tier_idx]
+        if tier_idx > 0:
+            self._n_downgrades += 1
+        status = STATUS_DEGRADED if tier_idx > 0 else STATUS_OK
+        for i, o in zip(idxs, outs):
+            self._latencies.append(dt)
+            self._record(
+                results,
+                i,
+                Result(
+                    rid=requests[i].rid,
+                    output=o,
+                    bucket=bucket_key,
+                    latency_s=dt,
+                    status=status,
+                    tier=tier.name,
+                    n_retries=n_retries,
+                ),
+            )
+
+    def _execute_ladder(
+        self,
+        batch: GraphBatch,
+        xs: list[np.ndarray],
+        rids: list[int],
+        bucket_key: tuple[int, int],
+        batch_index: int,
+    ):
+        """Walk the degradation ladder with bounded retries per tier.
+
+        Returns ``(outputs, tier_index, n_retries, error)`` — ``error`` is
+        ``None`` on success, the (taxonomy-wrapped) last failure when every
+        tier is exhausted.
+        """
+        x_np = batch.batch_features(xs)
+        last: BaseException | None = None
+        n_retries = 0
+        for tier_idx, tier in enumerate(self.ladder):
+            for attempt in range(self.retry.max_attempts):
+                try:
+                    outs = self._attempt(
+                        batch, x_np, rids, bucket_key, batch_index, tier
+                    )
+                    return outs, tier_idx, n_retries, None
+                except Exception as e:  # noqa: BLE001 — isolate any fault
+                    last = e
+                    if attempt < self.retry.max_retries:
+                        n_retries += 1
+                        self._n_retries += 1
+                        self.retry.sleep_for(attempt)
+            # tier exhausted: fall through to the next rung of the ladder
+        assert last is not None
+        return None, len(self.ladder) - 1, n_retries, as_serving_error(last)
+
+    def _attempt(
+        self,
+        batch: GraphBatch,
+        x_np: np.ndarray,
+        rids: list[int],
+        bucket_key: tuple[int, int],
+        batch_index: int,
+        tier: Tier,
+    ) -> list[np.ndarray]:
+        """One execution attempt on one tier (the unit of retry)."""
+        prog = self._program_for(batch, tier)
+        bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
+        corrupt = None
+        if self.injector is not None:
+            corrupt = self.injector.on_run(
+                bucket_key, batch_index, rids, tier.name
+            )
+        x = jnp.asarray(x_np)
+        if self.readout is None:
+            out = bound.run(self.params, x, donate=True)
+        else:
+            # readout over the padded slot count, not n_graphs: the
+            # executable shape then depends only on the bucket, so tail
+            # batches at any fill level reuse it (pad segments are sliced
+            # off below)
+            out = bound.run(
+                self.params,
+                x,
+                segment_ids=jnp.asarray(batch.segment_ids),
+                num_segments=batch.slots,
+                readout=self.readout,
+                donate=True,
+            )
+        arr = np.asarray(jax.block_until_ready(out))
+        if corrupt == "nan":
+            arr = self.injector.corrupt_output(arr)
+        if self.check_numerics and not np.isfinite(arr).all():
+            raise NumericalFault(
+                f"non-finite values in the output of bucket {bucket_key} "
+                f"batch {batch_index} (tier {tier.name}, rids {rids})"
+            )
+        if self.readout is None:
+            return batch.split_nodes(arr)
+        return list(arr[: batch.n_graphs])
 
     def stats(self) -> EngineStats:
         """The serving report over everything submitted so far."""
         lat_ms = np.asarray(self._latencies, dtype=np.float64) * 1e3
         n = len(self._latencies)
         return EngineStats(
-            n_requests=n,
+            n_requests=self._n_requests,
             n_batches=self._n_batches,
             n_buckets=len(self._buckets_seen),
             wall_s=self._wall_s,
@@ -314,4 +671,13 @@ class InferenceEngine:
             cache_hits=self.cache.hits,
             cache_misses=self.cache.misses,
             cache_evictions=self.cache.evictions,
+            n_ok=self._status_counts[STATUS_OK],
+            n_rejected=self._status_counts[STATUS_REJECTED],
+            n_failed=self._status_counts[STATUS_FAILED],
+            n_degraded=self._status_counts[STATUS_DEGRADED],
+            n_retries=self._n_retries,
+            n_downgrades=self._n_downgrades,
+            n_solo_retries=self._n_solo_retries,
+            n_stragglers=len(self.monitor.flagged),
+            errors=dict(self._errors),
         )

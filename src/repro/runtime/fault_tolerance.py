@@ -16,6 +16,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from .resilience import RetryPolicy
+
 log = logging.getLogger("repro.runtime")
 
 
@@ -65,8 +67,21 @@ class ResilientRunner:
     backoff_s: float = 0.0
     monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
 
+    @property
+    def retry_policy(self) -> RetryPolicy:
+        """The shared retry/backoff core (same machinery the serving
+        engine's degradation ladder uses)."""
+        return RetryPolicy(max_retries=self.max_retries,
+                           backoff_s=self.backoff_s)
+
     def run(self, state, batches, start_step: int = 0, num_steps: int = 100):
-        """Iterate ``batches`` (indexable by step) for num_steps."""
+        """Iterate ``batches`` (indexable by step) for num_steps.
+
+        ``metrics_log`` holds exactly one entry per *surviving* step: when
+        a restore rolls ``step`` back, entries for the steps about to be
+        replayed are truncated, so a replayed step never appears twice.
+        """
+        policy = self.retry_policy
         step = start_step
         metrics_log: list[dict] = []
         while step < start_step + num_steps:
@@ -85,8 +100,12 @@ class ResilientRunner:
                         step, state = self.restore_fn()
                         retries = 0
                         batch = batches(step)
-                    if self.backoff_s:
-                        time.sleep(self.backoff_s * retries)
+                        # drop metrics for the steps we are about to
+                        # replay, so each step is logged exactly once —
+                        # and don't sleep a backoff on the restore itself
+                        del metrics_log[max(step - start_step, 0):]
+                        continue
+                    policy.sleep_for(retries - 1)
             self.monitor.record(step, time.monotonic() - t0)
             metrics_log.append({"step": step, **metrics})
             step += 1

@@ -1,0 +1,223 @@
+"""Fault-injection tests for the training-side runtime: ResilientRunner
+retries transient faults, restores from the last checkpoint on persistent
+ones (resuming to bit-identical parameters, with no replayed step logged
+twice), and the StragglerMonitor flags slow steps and fires its hook."""
+import numpy as np
+import pytest
+
+from repro.runtime import ResilientRunner, RetryPolicy, StragglerMonitor
+from repro.runtime import fault_tolerance as ft_mod
+
+
+def sgd_step(state, batch):
+    """A tiny deterministic 'training' step: state is a float32 vector."""
+    return state - 0.1 * (state - batch), {"loss": float(np.sum(state**2))}
+
+
+def make_batches(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(64, 4)).astype(np.float32)
+    return lambda s: data[s % len(data)]
+
+
+def run_clean(num_steps: int, checkpoint_every: int = 4):
+    """The fault-free reference trajectory."""
+    saved = {}
+
+    def save(step, st):
+        saved[step] = np.array(st, copy=True)
+
+    runner = ResilientRunner(
+        step_fn=sgd_step,
+        save_fn=save,
+        restore_fn=lambda: (_ for _ in ()).throw(AssertionError("no restore")),
+        checkpoint_every=checkpoint_every,
+    )
+    state, metrics = runner.run(
+        np.ones(4, np.float32), make_batches(), 0, num_steps
+    )
+    return state, metrics
+
+
+class TestResilientRunner:
+    def test_transient_fault_retried_to_identical_result(self):
+        """One transient raise is absorbed by retry; the trajectory is
+        bit-identical to the fault-free run."""
+        clean_state, clean_metrics = run_clean(10)
+        calls = {"n": 0}
+
+        def flaky(state, batch):
+            calls["n"] += 1
+            if calls["n"] == 4:
+                raise RuntimeError("transient node failure")
+            return sgd_step(state, batch)
+
+        runner = ResilientRunner(
+            step_fn=flaky,
+            save_fn=lambda s, st: None,
+            restore_fn=lambda: (0, np.ones(4, np.float32)),
+            checkpoint_every=100,
+        )
+        state, metrics = runner.run(np.ones(4, np.float32), make_batches(), 0, 10)
+        assert np.array_equal(state, clean_state)
+        assert metrics == clean_metrics
+
+    def test_retry_then_restore_resumes_bit_identical(self):
+        """The docstring contract: a persistent fault exhausts retries,
+        restores from the last atomic checkpoint, and the deterministic
+        batch replay resumes to bit-identical parameters."""
+        clean_state, clean_metrics = run_clean(12, checkpoint_every=4)
+
+        saved = {}
+
+        def save(step, st):
+            saved["step"], saved["state"] = step, np.array(st, copy=True)
+
+        # fault at step 6 (after the step-4 checkpoint): fails 4 times,
+        # which exceeds max_retries=2 and forces a restore mid-failure
+        failing_step = 6
+        fail_budget = {"n": 4}
+        runner_step_counter = {"step": 0}
+
+        def step_with_fault(state, batch):
+            if (
+                runner_step_counter["step"] == failing_step
+                and fail_budget["n"] > 0
+            ):
+                fail_budget["n"] -= 1
+                raise RuntimeError("persistent kernel fault")
+            return sgd_step(state, batch)
+
+        batches = make_batches()
+
+        def counting_batches(s):
+            runner_step_counter["step"] = s
+            return batches(s)
+
+        def restore():
+            return saved["step"], np.array(saved["state"], copy=True)
+
+        runner = ResilientRunner(
+            step_fn=step_with_fault,
+            save_fn=save,
+            restore_fn=restore,
+            checkpoint_every=4,
+            max_retries=2,
+        )
+        state, metrics = runner.run(
+            np.ones(4, np.float32), counting_batches, 0, 12
+        )
+        assert np.array_equal(state, clean_state), (
+            "restore + deterministic replay must resume to bit-identical "
+            "parameters"
+        )
+        assert metrics == clean_metrics
+
+    def test_restore_truncates_replayed_metrics(self):
+        """The replay-bookkeeping fix: after a restore rolls the step
+        back, entries past the restore point are dropped, so no step
+        appears twice in the metrics log."""
+        saved = {}
+
+        def save(step, st):
+            saved["step"], saved["state"] = step, np.array(st, copy=True)
+
+        fail_budget = {"n": 2}
+        where = {"step": 0}
+
+        def step_fn(state, batch):
+            if where["step"] == 5 and fail_budget["n"] > 0:
+                fail_budget["n"] -= 1
+                raise RuntimeError("fault")
+            return sgd_step(state, batch)
+
+        batches = make_batches()
+
+        def tracking_batches(s):
+            where["step"] = s
+            return batches(s)
+
+        runner = ResilientRunner(
+            step_fn=step_fn,
+            save_fn=save,
+            restore_fn=lambda: (saved["step"], np.array(saved["state"])),
+            checkpoint_every=2,
+            max_retries=1,  # budget 2 > 1 retry -> restore fires
+        )
+        _, metrics = runner.run(np.ones(4, np.float32), tracking_batches, 0, 8)
+        steps = [m["step"] for m in metrics]
+        assert steps == list(range(8)), f"replayed steps logged twice: {steps}"
+
+    def test_no_backoff_sleep_on_restore_branch(self, monkeypatch):
+        """A restore replaces retrying; the backoff sleep must not fire on
+        that branch (it would stall recovery by max_backoff for nothing)."""
+        sleeps: list[float] = []
+        monkeypatch.setattr(
+            ft_mod.time, "sleep", lambda s: sleeps.append(s)
+        )
+        saved = {"step": 0, "state": np.ones(4, np.float32)}
+        budget = {"n": 1}
+
+        def step_fn(state, batch):
+            if budget["n"] > 0:
+                budget["n"] -= 1
+                raise RuntimeError("fault")
+            return sgd_step(state, batch)
+
+        runner = ResilientRunner(
+            step_fn=step_fn,
+            save_fn=lambda s, st: None,
+            restore_fn=lambda: (saved["step"], saved["state"]),
+            max_retries=0,  # first failure restores immediately
+            backoff_s=5.0,
+        )
+        runner.run(np.ones(4, np.float32), make_batches(), 0, 3)
+        assert sleeps == [], f"restore branch slept the backoff: {sleeps}"
+
+    def test_retry_policy_is_shared_machinery(self):
+        """The runner's backoff comes from the same RetryPolicy the
+        serving engine uses, with bounded exponential delays."""
+        runner = ResilientRunner(
+            step_fn=sgd_step,
+            save_fn=lambda s, st: None,
+            restore_fn=lambda: (0, None),
+            max_retries=3,
+            backoff_s=0.1,
+        )
+        policy = runner.retry_policy
+        assert isinstance(policy, RetryPolicy)
+        assert policy.max_retries == 3
+        assert policy.delay(0) == pytest.approx(0.1)
+        assert policy.delay(1) == pytest.approx(0.2)
+        assert policy.delay(10) <= policy.max_backoff_s
+
+
+class TestStragglerMonitor:
+    def test_flags_3x_median_step_and_fires_hook(self):
+        fired: list[tuple[int, float, float]] = []
+        mon = StragglerMonitor(
+            threshold=3.0,
+            on_straggler=lambda step, s, med: fired.append((step, s, med)),
+        )
+        for i in range(10):
+            assert not mon.record(i, 0.010)
+        assert mon.record(10, 0.031 * 1.01)  # just over 3x the 10ms median
+        assert mon.flagged == [10]
+        assert len(fired) == 1
+        step, seconds, med = fired[0]
+        assert step == 10
+        assert seconds > 3.0 * med
+
+    def test_below_threshold_not_flagged(self):
+        mon = StragglerMonitor(threshold=3.0)
+        for i in range(10):
+            mon.record(i, 0.010)
+        assert not mon.record(10, 0.029)
+        assert mon.flagged == []
+
+    def test_needs_history_before_flagging(self):
+        mon = StragglerMonitor(threshold=3.0)
+        # fewer than 8 samples: never flags, however slow
+        for i in range(7):
+            assert not mon.record(i, 10.0 if i == 6 else 0.01)
+        assert mon.flagged == []

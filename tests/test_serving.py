@@ -231,11 +231,16 @@ class TestInferenceEngine:
             assert res.output.shape == (req.graph.n_nodes, DIMS[-1][1])
 
     def test_feature_shape_validated(self):
+        """Per-request causes no longer raise out of submit(): a bad shape
+        comes back as a typed rejected Result naming the request id."""
         eng = self.engine()
         g = ring_graph(9)
         bad = Request(graph=g, x=np.zeros((9, 3), np.float32), rid=7)
-        with pytest.raises(ValueError, match="request 7"):
-            eng.submit([bad])
+        (res,) = eng.submit([bad])
+        assert res.status == "rejected"
+        assert res.error_type == "invalid_request"
+        assert res.output is None
+        assert "request 7" in res.error
 
     def test_params_required(self):
         eng = InferenceEngine(DIMS, policy=self.POL, schedule=SCHEDULE)
