@@ -34,6 +34,7 @@ MODULES = {
     "mapper": mapper_search,
     "serve": serve_gnn,
     "serve_chaos": serve_gnn,
+    "serve_restart": serve_gnn,
     "table3": table3_validation,
     "roofline": roofline,
 }
@@ -64,6 +65,8 @@ def main() -> int:
             rows = mod.run(smoke=True)
         elif n == "serve_chaos":
             rows = serve_gnn.run_chaos(smoke=args.fast)
+        elif n == "serve_restart":
+            rows = serve_gnn.run_restart(smoke=args.fast)
         elif n in ("fig12", "fig13") and args.fast:
             # skip the slow scalar-loop baseline (and its speedup guard)
             rows = mod.run(with_baseline=False)

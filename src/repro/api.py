@@ -27,6 +27,7 @@ skip the mapper entirely.
 from __future__ import annotations
 
 import json
+import os
 import zlib
 from dataclasses import asdict, dataclass, field, replace
 from pathlib import Path
@@ -51,6 +52,14 @@ from .gnn.layers import LAYER_FNS, EllAdjacency, init_layer
 from .gnn.model import GNNConfig, forward_layers, masked_xent_loss
 from .graphs.csr import CSRGraph
 
+#: Artifact schema version.  Bump the suffix whenever the JSON layout of
+#: :meth:`Program.to_json` changes incompatibly (new required field,
+#: changed schedule encoding, ...).  ``Program.from_json`` rejects any
+#: other format string with a ``ValueError`` — deliberately, so a loader
+#: can *choose* its forward-compat policy: direct callers see the error,
+#: while :class:`repro.runtime.store.ProgramStore` treats it as a cache
+#: miss and recompiles, which is how a version bump invalidates every
+#: persisted store entry without ever crashing a serving process.
 PROGRAM_FORMAT = "repro.program/v1"
 
 #: total number of XLA traces taken by Program executables, process-wide.
@@ -309,6 +318,42 @@ class Program:
             params, adj.indices, adj.weights, x, jnp.asarray(segment_ids)
         )
 
+    def prime(
+        self,
+        params,
+        mesh=None,
+        *,
+        segment_ids=None,
+        num_segments: int | None = None,
+        readout: str | None = None,
+        donate: bool = False,
+    ) -> int:
+        """Warm the executable cache for one input shape, off the request
+        path: runs :meth:`run` on a zeros feature array of the bound
+        graph's shape (same static knobs, so the jitted executable is the
+        exact one a later same-shape request will hit) and returns how
+        many new XLA traces it took — 0 when the shape was already warm.
+
+        The serving engine's :meth:`~repro.runtime.engine.InferenceEngine.
+        precompile` walks the expected bucket grid through this hook at
+        startup, so the first *request* of a revived process re-traces
+        nothing (see :func:`trace_count`).
+        """
+        adj = self._require_adj()
+        x = jnp.zeros((adj.n_nodes, self.dims[0][0]), jnp.float32)
+        before = _TRACE_COUNT
+        out = self.run(
+            params,
+            x,
+            mesh,
+            segment_ids=segment_ids,
+            num_segments=num_segments,
+            readout=readout,
+            donate=donate,
+        )
+        jax.block_until_ready(out)
+        return _TRACE_COUNT - before
+
     def loss(self, params, x, labels, mask, mesh=None):
         """Masked softmax cross-entropy over :meth:`run`'s logits."""
         return masked_xent_loss(self.run(params, x, mesh=mesh), labels, mask)
@@ -349,9 +394,20 @@ class Program:
         )
 
     def save(self, path) -> Path:
-        """Write the artifact; returns the path."""
+        """Write the artifact atomically; returns the path.
+
+        The JSON lands in a temp file in the same directory and is moved
+        into place with ``os.replace``, so a crash (or injected failure)
+        mid-write can never leave a truncated artifact at ``path`` — a
+        reader sees either the previous complete artifact or the new one.
+        """
         p = Path(path)
-        p.write_text(self.to_json())
+        tmp = p.with_name(p.name + f".tmp.{os.getpid()}")
+        try:
+            tmp.write_text(self.to_json())
+            os.replace(tmp, p)
+        finally:
+            tmp.unlink(missing_ok=True)
         return p
 
     @classmethod

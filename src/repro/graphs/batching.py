@@ -20,12 +20,17 @@ The serving loop on top lives in :mod:`repro.runtime.engine`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Sequence
 
 import numpy as np
 
 from .csr import CSRGraph, block_diagonal
+
+TRAFFIC_FORMAT = "repro.traffic/v1"
 
 
 def next_pow2(n: int) -> int:
@@ -212,6 +217,106 @@ def assemble(
         v_bucket=v_bucket,
         d_bucket=d_bucket,
     )
+
+
+@dataclass
+class TrafficProfile:
+    """Recorded per-bucket traffic: what a serving process actually saw.
+
+    Two ledgers, both additive counters:
+
+    * ``requests[(v_bucket, d_bucket)]`` — how many requests routed to the
+      bucket (its *heat*: the precompile priority order);
+    * ``batches[(v_bucket, d_bucket, slots)]`` — how many micro-batches
+      ran at each padded slot count.  The executable shape depends on
+      ``(v_bucket * slots, d_bucket)``, so these triples are exactly the
+      shapes a revived engine must warm to serve its first request
+      trace-free (:meth:`~repro.runtime.engine.InferenceEngine.precompile`).
+
+    The profile is serialized alongside the program store
+    (:meth:`repro.runtime.store.ProgramStore.save_profile`) so bucket heat
+    survives the process; :meth:`merge` folds one life's traffic into the
+    last one's.
+    """
+
+    requests: dict[tuple[int, int], int] = field(default_factory=dict)
+    batches: dict[tuple[int, int, int], int] = field(default_factory=dict)
+
+    def record_request(self, bucket: tuple[int, int], n: int = 1) -> None:
+        key = (int(bucket[0]), int(bucket[1]))
+        self.requests[key] = self.requests.get(key, 0) + int(n)
+
+    def record_batch(self, bucket: tuple[int, int], slots: int) -> None:
+        key = (int(bucket[0]), int(bucket[1]), int(slots))
+        self.batches[key] = self.batches.get(key, 0) + 1
+
+    @property
+    def n_requests(self) -> int:
+        return sum(self.requests.values())
+
+    def merge(self, other: "TrafficProfile") -> "TrafficProfile":
+        """A new profile with both ledgers summed (self is unchanged)."""
+        out = TrafficProfile(dict(self.requests), dict(self.batches))
+        for k, n in other.requests.items():
+            out.requests[k] = out.requests.get(k, 0) + n
+        for k, n in other.batches.items():
+            out.batches[k] = out.batches.get(k, 0) + n
+        return out
+
+    def hot_shapes(self) -> list[tuple[tuple[int, int], int]]:
+        """Every recorded ``((v_bucket, d_bucket), slots)`` shape, hottest
+        first: buckets by request count (descending), slot variants of a
+        bucket by batch count (descending); ties break on the smaller
+        shape so warmup cost stays deterministic."""
+        heat = lambda b: self.requests.get(b, 0)  # noqa: E731
+        shapes = sorted(
+            self.batches.items(),
+            key=lambda kv: (-heat(kv[0][:2]), -kv[1], kv[0]),
+        )
+        return [((v, d), s) for (v, d, s), _ in shapes]
+
+    # -- artifact ------------------------------------------------------------
+    def to_json(self) -> str:
+        payload = {
+            "format": TRAFFIC_FORMAT,
+            "requests": {
+                f"{v}x{d}": n for (v, d), n in sorted(self.requests.items())
+            },
+            "batches": {
+                f"{v}x{d}x{s}": n
+                for (v, d, s), n in sorted(self.batches.items())
+            },
+        }
+        return json.dumps(payload, indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "TrafficProfile":
+        d = json.loads(text)
+        if d.get("format") != TRAFFIC_FORMAT:
+            raise ValueError(
+                f"not a {TRAFFIC_FORMAT} artifact (format={d.get('format')!r})"
+            )
+        parse = lambda k: tuple(int(p) for p in k.split("x"))  # noqa: E731
+        return cls(
+            requests={parse(k): int(n) for k, n in d["requests"].items()},
+            batches={parse(k): int(n) for k, n in d["batches"].items()},
+        )
+
+    def save(self, path) -> Path:
+        """Atomic write (temp file + ``os.replace``), same contract as
+        :meth:`repro.api.Program.save`."""
+        p = Path(path)
+        tmp = p.with_name(p.name + f".tmp.{os.getpid()}")
+        try:
+            tmp.write_text(self.to_json())
+            os.replace(tmp, p)
+        finally:
+            tmp.unlink(missing_ok=True)
+        return p
+
+    @classmethod
+    def load(cls, path) -> "TrafficProfile":
+        return cls.from_json(Path(path).read_text())
 
 
 def bucketize(

@@ -1,11 +1,18 @@
 from .engine import (
     EngineStats,
     InferenceEngine,
+    PrecompileReport,
     ProgramCache,
     Request,
     Result,
 )
 from .fault_tolerance import ResilientRunner, StragglerMonitor
+from .store import (
+    ProgramStore,
+    enable_persistent_compilation_cache,
+    key_digest,
+    store_key,
+)
 from .faults import COMPILE, FaultInjector, FaultRule, InjectionEvent, kill_pallas
 from .resilience import (
     STATUS_DEGRADED,

@@ -23,7 +23,13 @@ batches 64/32 graphs per inference, Sec. 5.1.2).  The
    instead of occupying a slot.
 4. **Compile-or-load**: one Program per (workload fingerprint, bucket,
    tier, hw) key through an LRU cache — the mapper search and the XLA
-   compile are paid once per bucket, not once per request.
+   compile are paid once per bucket, not once per request.  With a
+   persistent :class:`~repro.runtime.store.ProgramStore` attached they
+   are paid once per bucket *ever*: fresh compiles persist to disk,
+   restarts load instead of searching, and
+   :meth:`InferenceEngine.precompile` replays the recorded
+   :class:`~repro.graphs.batching.TrafficProfile` at startup so even the
+   XLA traces happen off the request path (zero-cold-start serving).
 5. **Execute with fault isolation**: each micro-batch walks the
    degradation ladder (:func:`repro.runtime.resilience.default_ladder` —
    searched+Pallas -> searched+jnp -> default schedule) with bounded
@@ -53,14 +59,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..api import Program, compile as _compile
+from ..api import Program, compile as _compile, trace_count
 from ..core.cost_model import GNNLayerWorkload
 from ..core.hw import AcceleratorConfig, DEFAULT_ACCEL
 from ..core.schedule import ModelSchedule
-from ..graphs.batching import BucketPolicy, GraphBatch, assemble, bucketize
-from ..graphs.csr import CSRGraph
+from ..graphs.batching import (
+    BucketPolicy,
+    GraphBatch,
+    TrafficProfile,
+    assemble,
+    bucketize,
+)
+from ..graphs.csr import CSRGraph, block_diagonal, from_edges
 from .fault_tolerance import StragglerMonitor
 from .faults import FaultInjector
+from .store import ProgramStore, store_key
 from .resilience import (
     STATUS_DEGRADED,
     STATUS_FAILED,
@@ -136,10 +149,18 @@ class EngineStats:
     graphs_per_sec: float
     p50_ms: float
     p99_ms: float
-    compile_s: float  # mapper search + Program packaging (cold buckets)
+    #: ``search_s + trace_s`` — kept as the historical aggregate so older
+    #: dashboards/benchmark JSON keep a comparable column.
+    compile_s: float
+    search_s: float  # mapper search + Program packaging (cold buckets)
+    trace_s: float  # wall of executions that took new XLA traces/compiles
     cache_hits: int
     cache_misses: int
     cache_evictions: int
+    n_searches: int = 0  # mapper searches actually run (store hits skip them)
+    store_hits: int = 0  # programs loaded from the persistent store
+    store_misses: int = 0
+    store_corrupt: int = 0  # artifacts that existed but failed to load
     n_ok: int = 0
     n_rejected: int = 0
     n_failed: int = 0
@@ -149,6 +170,24 @@ class EngineStats:
     n_solo_retries: int = 0  # quarantine re-runs of single requests
     n_stragglers: int = 0  # micro-batches flagged by the StragglerMonitor
     errors: dict = field(default_factory=dict)  # taxonomy code -> count
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class PrecompileReport:
+    """What :meth:`InferenceEngine.precompile` did at startup: how many
+    bucket shapes it warmed, how many Programs came from the persistent
+    store vs fresh compiles (and how many of those ran the mapper), how
+    many XLA traces it took off the request path, and the wall clock."""
+
+    n_shapes: int = 0
+    n_store_hits: int = 0
+    n_compiled: int = 0  # store misses compiled in-process
+    n_searches: int = 0  # mapper searches among the compiles
+    n_traces: int = 0  # XLA traces taken while warming
+    wall_s: float = 0.0
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -221,7 +260,11 @@ class InferenceEngine:
     * ``check_numerics`` — treat non-finite outputs as faults (retried,
       then ``failed``) instead of returning them silently;
     * ``monitor`` — per-micro-batch latency
-      :class:`~repro.runtime.fault_tolerance.StragglerMonitor`.
+      :class:`~repro.runtime.fault_tolerance.StragglerMonitor`;
+    * ``store`` — a persistent
+      :class:`~repro.runtime.store.ProgramStore` backing the LRU:
+      compiled Programs and the traffic profile survive the process, and
+      :meth:`precompile` warms the recorded bucket grid at startup.
     """
 
     def __init__(
@@ -243,6 +286,7 @@ class InferenceEngine:
         fault_injector: FaultInjector | None = None,
         check_numerics: bool = True,
         monitor: StragglerMonitor | None = None,
+        store: ProgramStore | None = None,
     ):
         self.dims = [(int(fi), int(fo)) for fi, fo in dims]
         if not self.dims:
@@ -266,6 +310,18 @@ class InferenceEngine:
         self.check_numerics = check_numerics
         self.monitor = monitor if monitor is not None else StragglerMonitor()
         self.cache = ProgramCache(cache_capacity)
+        #: optional persistent backing for the program cache: a miss here
+        #: consults the store before compiling, and every fresh compile is
+        #: persisted, so a restarted engine loads instead of searching.
+        self.store = store
+        #: recorded bucket traffic.  Seeded from the store's persisted
+        #: profile (bucket heat survives the process) and re-persisted
+        #: after every ``submit``; ``precompile()`` replays it at startup.
+        self.profile: TrafficProfile = TrafficProfile()
+        if store is not None:
+            prior = store.load_profile()
+            if prior is not None:
+                self.profile = prior
         #: searched schedules keyed by (v_bucket, d_bucket): the mapper
         #: runs once per bucket; slot-count variants of the bucket (partial
         #: tail batches) reuse the schedule and only pay their XLA compile.
@@ -276,7 +332,9 @@ class InferenceEngine:
         self._n_requests = 0
         self._n_batches = 0
         self._wall_s = 0.0
-        self._compile_s = 0.0
+        self._search_s = 0.0  # mapper search + Program packaging
+        self._trace_s = 0.0  # wall of executions that took new XLA traces
+        self._n_searches = 0  # mapper searches actually run
         self._status_counts = {s: 0 for s in
                                (STATUS_OK, STATUS_REJECTED, STATUS_FAILED,
                                 STATUS_DEGRADED)}
@@ -304,7 +362,9 @@ class InferenceEngine:
         return self.params
 
     # -- program cache -------------------------------------------------------
-    def _cache_key(self, batch: GraphBatch, tier: Tier) -> tuple:
+    def _shape_key(
+        self, v_bucket: int, v_total: int, d_bucket: int, tier: Tier
+    ) -> tuple:
         return (
             tuple(self.dims),
             self.kind,
@@ -312,8 +372,27 @@ class InferenceEngine:
             (tier.use_pallas, tier.searched),
             # v_bucket AND v_total: buckets whose v_bucket * slots products
             # coincide (e.g. 32x2 and 64x1) must not share a Program
-            (batch.v_bucket, batch.v_total, batch.d_bucket),
+            (v_bucket, v_total, d_bucket),
             tuple(sorted(asdict(self.hw).items())),
+        )
+
+    def _cache_key(self, batch: GraphBatch, tier: Tier) -> tuple:
+        return self._shape_key(
+            batch.v_bucket, batch.v_total, batch.d_bucket, tier
+        )
+
+    def _store_key(self, batch: GraphBatch, tier: Tier) -> dict:
+        """The persistent twin of :meth:`_cache_key` (see
+        :func:`repro.runtime.store.store_key`)."""
+        return store_key(
+            self.dims,
+            (batch.v_bucket, batch.d_bucket),
+            batch.v_total,
+            kind=self.kind,
+            objective=self.objective,
+            use_pallas=tier.use_pallas,
+            searched=tier.searched,
+            hw=self.hw,
         )
 
     def _default_schedule(self) -> ModelSchedule:
@@ -322,47 +401,168 @@ class InferenceEngine:
         return ModelSchedule.from_policies("sp_opt", "AC", self.dims)
 
     def _program_for(self, batch: GraphBatch, tier: Tier) -> Program:
-        """Compile (or load) the bucket's Program for one ladder tier.
-        The mapper searches on the bucket's first micro-batch; later
-        batches of the bucket reuse the schedule *and* the jitted
-        executables (the Program's exec cache is shared across ``bind``).
-        A jnp tier whose Pallas twin is already cached derives from it via
-        :meth:`Program.degraded` instead of recompiling."""
+        """Compile — or load — the bucket's Program for one ladder tier.
+
+        Resolution order on a memory-cache miss: the persistent
+        :class:`~repro.runtime.store.ProgramStore` (a restarted engine
+        loads the searched schedule instead of re-running the mapper; a
+        corrupt artifact is a counted miss, never a crash), then the
+        cached Pallas twin via :meth:`Program.degraded`, then a fresh
+        compile — which is persisted back to the store atomically.  The
+        mapper searches on the bucket's first micro-batch; later batches
+        of the bucket reuse the schedule *and* the jitted executables
+        (the Program's exec cache is shared across ``bind``).
+        """
         key = self._cache_key(batch, tier)
         prog = self.cache.get(key)
         if prog is None:
             if self.injector is not None:
                 self.injector.on_compile((batch.v_bucket, batch.d_bucket))
-            t0 = time.perf_counter()
             bucket = (batch.v_bucket, batch.d_bucket)
-            twin = None
-            if tier.searched and not tier.use_pallas:
-                pallas_tier = Tier("pallas+searched", True, True)
-                twin = self.cache.peek(self._cache_key(batch, pallas_tier))
-            if twin is not None:
-                prog = twin.degraded(use_pallas=False)
-            else:
-                wls = [
-                    GNNLayerWorkload(batch.graph.nnz, fi, fo, name=f"layer{i}")
-                    for i, (fi, fo) in enumerate(self.dims)
-                ]
-                if tier.searched:
-                    sched = self.schedule or self._schedules.get(bucket)
+            skey = None
+            if self.store is not None:
+                skey = self._store_key(batch, tier)
+                prog = self.store.get(skey)
+            if prog is None:
+                t0 = time.perf_counter()
+                twin = None
+                if tier.searched and not tier.use_pallas:
+                    pallas_tier = Tier("pallas+searched", True, True)
+                    twin = self.cache.peek(
+                        self._cache_key(batch, pallas_tier)
+                    )
+                if twin is not None:
+                    prog = twin.degraded(use_pallas=False)
                 else:
-                    sched = self._default_schedule()
-                prog = _compile(
-                    wls,
-                    hw=self.hw,
-                    objective=self.objective,
-                    schedule=sched,
-                    kind=self.kind,
-                    use_pallas=tier.use_pallas,
-                )
+                    wls = [
+                        GNNLayerWorkload(
+                            batch.graph.nnz, fi, fo, name=f"layer{i}"
+                        )
+                        for i, (fi, fo) in enumerate(self.dims)
+                    ]
+                    if tier.searched:
+                        sched = self.schedule or self._schedules.get(bucket)
+                    else:
+                        sched = self._default_schedule()
+                    if tier.searched and sched is None:
+                        self._n_searches += 1
+                    prog = _compile(
+                        wls,
+                        hw=self.hw,
+                        objective=self.objective,
+                        schedule=sched,
+                        kind=self.kind,
+                        use_pallas=tier.use_pallas,
+                    )
+                self._search_s += time.perf_counter() - t0
+                if skey is not None:
+                    self.store.put(skey, prog)
             if tier.searched:
                 self._schedules.setdefault(bucket, prog.schedule)
-            self._compile_s += time.perf_counter() - t0
             self.cache.put(key, prog)
         return prog
+
+    # -- ahead-of-time warmup ------------------------------------------------
+    def _synthetic_batch(
+        self, v_bucket: int, d_bucket: int, slots: int
+    ) -> GraphBatch:
+        """A stand-in micro-batch with the bucket's exact device shapes:
+        ``slots`` member graphs of ``v_bucket`` nodes each (rings, or
+        isolated self-loops when the degree bucket is too narrow for a
+        ring), so binding at ``pad_degree=d_bucket`` and reading out over
+        ``slots`` segments warms precisely the executable a real batch of
+        this shape will request.  Only shapes matter here — the adjacency
+        values never reach a served answer."""
+        if d_bucket >= 3 and v_bucket >= 3:
+            src = np.arange(v_bucket)
+            dst = (src + 1) % v_bucket
+            member = from_edges(
+                v_bucket, np.concatenate([src, dst]), np.concatenate([dst, src])
+            )
+        else:
+            member = from_edges(
+                v_bucket, np.zeros(0, np.int64), np.zeros(0, np.int64)
+            )
+        batched = block_diagonal([member] * slots)
+        segment_ids = np.repeat(
+            np.arange(slots, dtype=np.int32), v_bucket
+        )
+        return GraphBatch(
+            graph=batched,
+            segment_ids=segment_ids,
+            sizes=np.full(slots, v_bucket, dtype=np.int64),
+            v_bucket=v_bucket,
+            d_bucket=d_bucket,
+        )
+
+    def precompile(
+        self,
+        profile: TrafficProfile | None = None,
+        *,
+        max_shapes: int | None = None,
+    ) -> PrecompileReport:
+        """Warm the expected bucket grid ahead of traffic, hottest first.
+
+        For every ``((v_bucket, d_bucket), slots)`` shape the
+        :class:`~repro.graphs.batching.TrafficProfile` recorded (argument,
+        else the store's persisted profile, else this engine's own), the
+        preferred ladder tier's Program is compiled-or-loaded through the
+        store-backed cache and its executable traced on a synthetic batch
+        via :meth:`Program.prime <repro.api.Program.prime>` — so a revived
+        engine pays mapper search *zero* times (store hits) and takes
+        every XLA trace here, off the request path: the first real request
+        of a warm shape re-traces nothing (``repro.trace_count()`` delta
+        of 0) and runs at warm-path latency.  ``max_shapes`` bounds
+        startup work to the hottest shapes.
+        """
+        if self.params is None:
+            raise ValueError(
+                "engine has no params; pass params= or call engine.init(rng)"
+            )
+        if profile is None and self.store is not None:
+            profile = self.store.load_profile()
+        if profile is None:
+            profile = self.profile
+        rep = PrecompileReport()
+        t0 = time.perf_counter()
+        shapes = profile.hot_shapes()
+        if max_shapes is not None:
+            shapes = shapes[:max_shapes]
+        tier = self.ladder[0]
+        hits0 = self.store.hits if self.store is not None else 0
+        searches0 = self._n_searches
+        misses0 = self.cache.misses
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            for (v_bucket, d_bucket), slots in shapes:
+                batch = self._synthetic_batch(v_bucket, d_bucket, slots)
+                self._buckets_seen.add((v_bucket, d_bucket))
+                prog = self._program_for(batch, tier)
+                bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
+                t_run = time.perf_counter()
+                if self.readout is None:
+                    n_new = bound.prime(self.params, donate=True)
+                else:
+                    n_new = bound.prime(
+                        self.params,
+                        segment_ids=jnp.asarray(batch.segment_ids),
+                        num_segments=batch.slots,
+                        readout=self.readout,
+                        donate=True,
+                    )
+                if n_new:
+                    self._trace_s += time.perf_counter() - t_run
+                rep.n_shapes += 1
+                rep.n_traces += n_new
+        rep.n_store_hits = (
+            (self.store.hits - hits0) if self.store is not None else 0
+        )
+        rep.n_searches = self._n_searches - searches0
+        # shapes already warm in the memory cache cost neither a store
+        # load nor a compile, so count compiles off the cache-miss delta
+        rep.n_compiled = (self.cache.misses - misses0) - rep.n_store_hits
+        rep.wall_s = time.perf_counter() - t0
+        return rep
 
     # -- admission -----------------------------------------------------------
     def _retry_after_hint(self) -> float:
@@ -457,6 +657,7 @@ class InferenceEngine:
                 )
                 for bucket_key, local_idxs in routed.items():
                     self._buckets_seen.add(bucket_key)
+                    self.profile.record_request(bucket_key, len(local_idxs))
                     idxs = [admitted[j] for j in local_idxs]
                     for chunk in _chunks(idxs, self.policy.max_graphs):
                         live = self._enforce_deadlines(
@@ -467,6 +668,8 @@ class InferenceEngine:
                                 requests, live, bucket_key, results
                             )
         self._wall_s += time.perf_counter() - t_submit
+        if self.store is not None:
+            self.store.save_profile(self.profile)
         return results  # type: ignore[return-value]
 
     def _enforce_deadlines(
@@ -513,6 +716,7 @@ class InferenceEngine:
         whole-batch fault, quarantine by re-running each member solo."""
         t0 = time.perf_counter()
         batch = assemble([requests[i].graph for i in idxs], self.policy)
+        self.profile.record_batch(bucket_key, batch.slots)
         xs = [requests[i].x for i in idxs]
         rids = [requests[i].rid for i in idxs]
         batch_index = self._batch_seq.get(bucket_key, 0)
@@ -628,6 +832,8 @@ class InferenceEngine:
                 bucket_key, batch_index, rids, tier.name
             )
         x = jnp.asarray(x_np)
+        traces_before = trace_count()
+        t_run = time.perf_counter()
         if self.readout is None:
             out = bound.run(self.params, x, donate=True)
         else:
@@ -644,6 +850,12 @@ class InferenceEngine:
                 donate=True,
             )
         arr = np.asarray(jax.block_until_ready(out))
+        if trace_count() > traces_before:
+            # first execution on a cold shape: this wall is dominated by
+            # the XLA trace + compile (or the persistent-cache load), so
+            # attribute it to trace_s — that is exactly what precompile()
+            # and the compilation cache save a revived engine.
+            self._trace_s += time.perf_counter() - t_run
         if corrupt == "nan":
             arr = self.injector.corrupt_output(arr)
         if self.check_numerics and not np.isfinite(arr).all():
@@ -667,10 +879,16 @@ class InferenceEngine:
             graphs_per_sec=n / self._wall_s if self._wall_s > 0 else 0.0,
             p50_ms=float(np.percentile(lat_ms, 50)) if n else 0.0,
             p99_ms=float(np.percentile(lat_ms, 99)) if n else 0.0,
-            compile_s=self._compile_s,
+            compile_s=self._search_s + self._trace_s,
+            search_s=self._search_s,
+            trace_s=self._trace_s,
             cache_hits=self.cache.hits,
             cache_misses=self.cache.misses,
             cache_evictions=self.cache.evictions,
+            n_searches=self._n_searches,
+            store_hits=self.store.hits if self.store is not None else 0,
+            store_misses=self.store.misses if self.store is not None else 0,
+            store_corrupt=self.store.corrupt if self.store is not None else 0,
             n_ok=self._status_counts[STATUS_OK],
             n_rejected=self._status_counts[STATUS_REJECTED],
             n_failed=self._status_counts[STATUS_FAILED],

@@ -1,0 +1,259 @@
+"""Persistent program store: compiled serving artifacts that survive the
+process.
+
+The serving engine's :class:`~repro.runtime.engine.ProgramCache` amortizes
+mapper search and XLA tracing *within* a process; every restart used to
+pay all of it again (cold p99 913 ms vs 11 ms p50 in
+``experiments/benchmarks/serve_gnn.json``).  The paper's premise is that
+the expensive part — exploring the sparse/dense dataflow design-space —
+is per workload *shape*, not per request, so the searched schedule should
+outlive the process.  This module is that persistence layer:
+
+* :class:`ProgramStore` — a directory of :class:`~repro.api.Program`
+  JSON artifacts keyed by ``(layer dims, bucket shape, kind, objective,
+  tier, hw)``.  ``Program.save``/``load`` is already byte-stable JSON
+  with a workload fingerprint, so the store is artifacts plus a versioned
+  index.  Loads are **corruption-tolerant by construction**: the artifact
+  path is derived from the key digest (the index is informational), and a
+  truncated / garbage / wrong-format artifact is a counted cache miss,
+  never a crash — the engine just recompiles and :meth:`put` repairs the
+  entry atomically.
+* :func:`enable_persistent_compilation_cache` — wires JAX's persistent
+  compilation cache so the XLA executables behind ``Program.run`` also
+  survive restarts: a revived process still re-traces (tracing is a
+  Python-process affair) but the XLA compile behind each trace becomes a
+  disk hit.  :meth:`InferenceEngine.precompile
+  <repro.runtime.engine.InferenceEngine.precompile>` moves those traces
+  off the request path at startup.
+* The recorded :class:`~repro.graphs.batching.TrafficProfile` is
+  serialized alongside the artifacts (:meth:`ProgramStore.save_profile`)
+  so a revived engine knows which bucket shapes to warm, hottest first.
+
+Store layout::
+
+    <root>/
+      index.json              # versioned key -> file listing (informational)
+      <digest>.program.json   # one Program artifact per key
+      traffic.json            # TrafficProfile (bucket heat across lives)
+      jax-cache/              # XLA persistent compilation cache (opt-in)
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import asdict
+from pathlib import Path
+from typing import Iterator
+
+from ..api import Program
+from ..graphs.batching import TrafficProfile
+
+STORE_FORMAT = "repro.store/v1"
+
+#: environment override for the XLA persistent compilation cache location
+#: (see :func:`enable_persistent_compilation_cache`).
+JAX_CACHE_ENV = "REPRO_JAX_CACHE_DIR"
+
+_INDEX = "index.json"
+_PROFILE = "traffic.json"
+_SUFFIX = ".program.json"
+
+
+def store_key(
+    dims,
+    bucket: tuple[int, int],
+    v_total: int,
+    *,
+    kind: str,
+    objective: str,
+    use_pallas: bool,
+    searched: bool = True,
+    hw=None,
+) -> dict:
+    """The canonical store key for one compiled serving artifact.
+
+    ``dims`` + ``bucket`` are the workload fingerprint at serving
+    granularity: every micro-batch of a bucket presents the same padded
+    shapes, so one artifact serves them all (``v_total`` distinguishes
+    slot-count variants of the bucket — their executables differ).
+    ``hw`` is an :class:`~repro.core.hw.AcceleratorConfig` (or ``None``
+    for "any").
+    """
+    return {
+        "dims": [[int(fi), int(fo)] for fi, fo in dims],
+        "bucket": [int(bucket[0]), int(bucket[1])],
+        "v_total": int(v_total),
+        "kind": str(kind),
+        "objective": str(objective),
+        "use_pallas": bool(use_pallas),
+        "searched": bool(searched),
+        "hw": None if hw is None else {k: v for k, v in sorted(asdict(hw).items())},
+    }
+
+
+def key_digest(key: dict) -> str:
+    """Stable content digest of a store key (the artifact's filename)."""
+    blob = json.dumps(key, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:20]
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    tmp = path.with_name(path.name + f".tmp.{os.getpid()}")
+    try:
+        tmp.write_text(text)
+        os.replace(tmp, path)
+    finally:
+        tmp.unlink(missing_ok=True)
+
+
+class ProgramStore:
+    """On-disk cache of compiled :class:`~repro.api.Program` artifacts.
+
+    ``get`` returns ``None`` on any miss — absent, truncated, garbage,
+    wrong artifact format, or key mismatch — and counts the cause
+    (``hits`` / ``misses`` / ``corrupt``); it never raises for a bad
+    artifact, because a store must degrade to a recompile, not take the
+    serving process down.  ``put`` writes atomically (temp file +
+    ``os.replace``) so a crash mid-write can't strand a truncated entry.
+
+    The index file is a versioned, human-readable listing (key -> file);
+    it is *not* load-bearing: artifact paths derive from the key digest,
+    so a corrupt or missing index only costs :meth:`keys` its listing
+    until the next :meth:`put` rewrites it.
+    """
+
+    def __init__(self, root, *, jax_cache: bool = False):
+        self.root = Path(root).expanduser()
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.corrupt = 0  # artifacts that existed but failed to load
+        self._index: dict[str, dict] = self._load_index()
+        if jax_cache:
+            # co-locate the XLA cache with the store unless the operator
+            # pointed REPRO_JAX_CACHE_DIR somewhere else (CI does, so the
+            # two caches can be restored independently)
+            enable_persistent_compilation_cache(
+                None if os.environ.get(JAX_CACHE_ENV)
+                else self.root / "jax-cache"
+            )
+
+    # -- index ---------------------------------------------------------------
+    def _load_index(self) -> dict[str, dict]:
+        path = self.root / _INDEX
+        try:
+            d = json.loads(path.read_text())
+            if d.get("format") != STORE_FORMAT:
+                raise ValueError(f"index format {d.get('format')!r}")
+            return dict(d["entries"])
+        except FileNotFoundError:
+            return {}
+        except Exception:
+            # a bad index is cosmetic: rebuild the listing from the
+            # artifacts actually on disk (their keys are in the payloads)
+            entries: dict[str, dict] = {}
+            for p in sorted(self.root.glob(f"*{_SUFFIX}")):
+                entries[p.name[: -len(_SUFFIX)]] = {"file": p.name}
+            return entries
+
+    def _save_index(self) -> None:
+        payload = {"format": STORE_FORMAT, "entries": self._index}
+        _atomic_write_text(
+            self.root / _INDEX,
+            json.dumps(payload, indent=2, sort_keys=True) + "\n",
+        )
+
+    # -- artifacts -----------------------------------------------------------
+    def path_for(self, key: dict) -> Path:
+        return self.root / f"{key_digest(key)}{_SUFFIX}"
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob(f"*{_SUFFIX}"))
+
+    def __contains__(self, key: dict) -> bool:
+        return self.path_for(key).exists()
+
+    def keys(self) -> Iterator[dict]:
+        """The indexed keys (informational listing)."""
+        for entry in self._index.values():
+            if "key" in entry:
+                yield entry["key"]
+
+    def get(self, key: dict) -> Program | None:
+        """Load the artifact for ``key``, or ``None`` (miss) — never
+        raises for a bad artifact."""
+        path = self.path_for(key)
+        if not path.exists():
+            self.misses += 1
+            return None
+        try:
+            prog = Program.from_json(path.read_text())
+        except Exception:
+            # truncated write, garbage bytes, or a PROGRAM_FORMAT bump:
+            # all of them degrade to a recompile
+            self.corrupt += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        return prog
+
+    def put(self, key: dict, program: Program) -> Path:
+        """Persist ``program`` under ``key`` (atomic), update the index."""
+        digest = key_digest(key)
+        path = self.root / f"{digest}{_SUFFIX}"
+        program.save(path)  # Program.save is atomic
+        self._index[digest] = {"file": path.name, "key": key}
+        self._save_index()
+        return path
+
+    # -- traffic profile -----------------------------------------------------
+    @property
+    def profile_path(self) -> Path:
+        return self.root / _PROFILE
+
+    def save_profile(self, profile: TrafficProfile) -> Path:
+        return profile.save(self.profile_path)
+
+    def load_profile(self) -> TrafficProfile | None:
+        """The persisted bucket-heat profile, or ``None`` when absent or
+        unreadable (same corruption tolerance as :meth:`get`)."""
+        try:
+            return TrafficProfile.load(self.profile_path)
+        except FileNotFoundError:
+            return None
+        except Exception:
+            self.corrupt += 1
+            return None
+
+    def stats(self) -> dict:
+        return {
+            "n_artifacts": len(self),
+            "hits": self.hits,
+            "misses": self.misses,
+            "corrupt": self.corrupt,
+        }
+
+
+def enable_persistent_compilation_cache(cache_dir=None) -> Path:
+    """Point JAX's persistent compilation cache at ``cache_dir`` so the
+    XLA executables behind every jitted ``Program.run`` survive restarts.
+
+    Resolution order: explicit ``cache_dir`` argument, the
+    ``REPRO_JAX_CACHE_DIR`` environment variable, then
+    ``~/.cache/repro/jax-cache``.  The min-compile-time threshold is
+    dropped to zero because serving executables on small bucket shapes
+    compile fast but add up across a fleet of buckets — exactly the
+    entries the default 1 s threshold would skip.  Returns the directory.
+    """
+    import jax
+
+    d = Path(
+        cache_dir
+        or os.environ.get(JAX_CACHE_ENV)
+        or Path.home() / ".cache" / "repro" / "jax-cache"
+    ).expanduser()
+    d.mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(d))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    return d
