@@ -26,6 +26,26 @@ except AttributeError:  # jax 0.4/0.5: experimental home, check_rep arg
     _SHARD_MAP_KW = {"check_rep": False}
 
 
+def mesh_devices(
+    mesh: jax.sharding.Mesh | None = None,
+    devices: list | None = None,
+) -> list:
+    """Flatten a placement target into an ordered device list.
+
+    Accepts a :class:`jax.sharding.Mesh` (any axis shape — placement is
+    over the flattened device grid), an explicit device list, or neither
+    (all local devices).  The serving scheduler and the PP path share this
+    so "the mesh" means the same devices in both.
+    """
+    if mesh is not None and devices is not None:
+        raise ValueError("pass mesh= or devices=, not both")
+    if mesh is not None:
+        return list(mesh.devices.flat)
+    if devices is not None:
+        return list(devices)
+    return list(jax.devices())
+
+
 def pp_multiphase_matmul(
     adj,
     x: jax.Array,

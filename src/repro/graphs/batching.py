@@ -263,6 +263,26 @@ class TrafficProfile:
             out.batches[k] = out.batches.get(k, 0) + n
         return out
 
+    def heat(self) -> list[tuple[tuple[int, int], int]]:
+        """Buckets with their request counts, hottest first (ties break on
+        the smaller bucket, so placement is deterministic).  This is the
+        placer's input: the hottest buckets get replicas first."""
+        return sorted(self.requests.items(), key=lambda kv: (-kv[1], kv[0]))
+
+    def subset(
+        self, buckets: "set[tuple[int, int]] | Sequence[tuple[int, int]]"
+    ) -> "TrafficProfile":
+        """A new profile restricted to ``buckets`` — what one device of a
+        placement should precompile (its assigned buckets only, with their
+        recorded slot variants intact)."""
+        keep = {(int(v), int(d)) for v, d in buckets}
+        return TrafficProfile(
+            requests={b: n for b, n in self.requests.items() if b in keep},
+            batches={
+                k: n for k, n in self.batches.items() if k[:2] in keep
+            },
+        )
+
     def hot_shapes(self) -> list[tuple[tuple[int, int], int]]:
         """Every recorded ``((v_bucket, d_bucket), slots)`` shape, hottest
         first: buckets by request count (descending), slot variants of a

@@ -7,6 +7,12 @@ from .engine import (
     Result,
 )
 from .fault_tolerance import ResilientRunner, StragglerMonitor
+from .scheduler import (
+    AsyncEngine,
+    AsyncEngineStats,
+    AsyncPrecompileReport,
+    BucketPlacer,
+)
 from .store import (
     ProgramStore,
     enable_persistent_compilation_cache,

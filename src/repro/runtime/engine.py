@@ -52,7 +52,7 @@ from __future__ import annotations
 import time
 import warnings
 from collections import OrderedDict
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, replace as dc_replace
 from typing import Sequence
 
 import jax
@@ -87,6 +87,7 @@ from .resilience import (
     ServingError,
     Tier,
     as_serving_error,
+    backlog_retry_after,
     default_ladder,
     validate_request,
 )
@@ -123,13 +124,16 @@ class Result:
     rid: int
     output: np.ndarray | None
     bucket: tuple[int, int] | None
-    latency_s: float  # wall time of this request's micro-batch
+    latency_s: float  # this request's enqueue -> result wall time
     status: str = STATUS_OK
     error: str | None = None
     error_type: str | None = None
     tier: str | None = None  # execution tier that produced the output
     n_retries: int = 0
     retry_after_s: float | None = None  # backpressure hint on shed load
+    #: which device served this request (the engine's ``device_label``;
+    #: the async front-end sets one per worker).  ``None`` = default.
+    device: str | None = None
 
     @property
     def ok(self) -> bool:
@@ -140,7 +144,13 @@ class Result:
 @dataclass
 class EngineStats:
     """Aggregate serving report: throughput, latency percentiles, and the
-    resilience ledger (statuses, retries, downgrades, stragglers)."""
+    resilience ledger (statuses, retries, downgrades, stragglers).
+
+    ``p50_ms`` / ``p99_ms`` are **per-request** enqueue -> result wall
+    times (a request that waits behind earlier micro-batches of the same
+    ``submit`` call — or in the async front-end's arrival queue — is
+    charged that wait), not per-micro-batch wall; ``batch_p50_ms`` is the
+    per-micro-batch median for comparison."""
 
     n_requests: int
     n_batches: int
@@ -170,6 +180,7 @@ class EngineStats:
     n_solo_retries: int = 0  # quarantine re-runs of single requests
     n_stragglers: int = 0  # micro-batches flagged by the StragglerMonitor
     errors: dict = field(default_factory=dict)  # taxonomy code -> count
+    batch_p50_ms: float = 0.0  # median micro-batch wall (drain-rate probe)
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -287,6 +298,8 @@ class InferenceEngine:
         check_numerics: bool = True,
         monitor: StragglerMonitor | None = None,
         store: ProgramStore | None = None,
+        donate: bool = True,
+        device_label: str | None = None,
     ):
         self.dims = [(int(fi), int(fo)) for fi, fo in dims]
         if not self.dims:
@@ -308,6 +321,15 @@ class InferenceEngine:
         self.max_inflight_graphs = max_inflight_graphs
         self.injector = fault_injector
         self.check_numerics = check_numerics
+        #: donate feature buffers to the executables.  The async front-end
+        #: turns this off: it stages features onto the target device ahead
+        #: of dispatch, and a donated pre-staged buffer could not survive a
+        #: ladder retry.  The flag is part of the executable cache key, so
+        #: an engine must pick one mode and keep it (precompile honors it).
+        self.donate = donate
+        #: stamped on every Result this engine produces (the async
+        #: front-end labels each per-device engine with its jax device).
+        self.device_label = device_label
         self.monitor = monitor if monitor is not None else StragglerMonitor()
         self.cache = ProgramCache(cache_capacity)
         #: optional persistent backing for the program cache: a miss here
@@ -327,7 +349,8 @@ class InferenceEngine:
         #: tail batches) reuse the schedule and only pay their XLA compile.
         self._schedules: dict[tuple[int, int], ModelSchedule] = {}
         # accumulators behind stats()
-        self._latencies: list[float] = []
+        self._latencies: list[float] = []  # per-request enqueue -> result
+        self._batch_walls: list[float] = []  # per-micro-batch wall times
         self._buckets_seen: set[tuple[int, int]] = set()
         self._n_requests = 0
         self._n_batches = 0
@@ -540,15 +563,19 @@ class InferenceEngine:
                 prog = self._program_for(batch, tier)
                 bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
                 t_run = time.perf_counter()
+                # prime with this engine's donate flag: the jit-executable
+                # cache keys on it, so a donate=False (async) engine must
+                # warm donate=False executables or the first real request
+                # would re-trace
                 if self.readout is None:
-                    n_new = bound.prime(self.params, donate=True)
+                    n_new = bound.prime(self.params, donate=self.donate)
                 else:
                     n_new = bound.prime(
                         self.params,
                         segment_ids=jnp.asarray(batch.segment_ids),
                         num_segments=batch.slots,
                         readout=self.readout,
-                        donate=True,
+                        donate=self.donate,
                     )
                 if n_new:
                     self._trace_s += time.perf_counter() - t_run
@@ -565,13 +592,21 @@ class InferenceEngine:
         return rep
 
     # -- admission -----------------------------------------------------------
-    def _retry_after_hint(self) -> float:
-        """Backpressure hint for shed load: the recent median micro-batch
-        latency (time for one batch worth of queue to drain)."""
-        if not self._latencies:
+    def median_batch_wall(self) -> float:
+        """Recent median micro-batch wall time (the engine's drain rate);
+        a conservative 50 ms before the first batch completes."""
+        if not self._batch_walls:
             return 0.05
-        recent = self._latencies[-50:]
-        return float(np.median(recent))
+        return float(np.median(self._batch_walls[-50:]))
+
+    def _retry_after_hint(self, queue_depth: int) -> float:
+        """Backpressure hint for shed load, proportional to the backlog:
+        the number of micro-batches the queued graphs represent times the
+        recent median batch wall — not just one request's latency — so
+        shed clients back off long enough for the queue to actually drain."""
+        return backlog_retry_after(
+            queue_depth, self.median_batch_wall(), self.policy.max_graphs
+        )
 
     def _admission_error(self, req: Request, n_admitted: int) -> ServingError | None:
         try:
@@ -583,7 +618,7 @@ class InferenceEngine:
                 self.max_inflight_graphs is not None
                 and n_admitted >= self.max_inflight_graphs
             ):
-                hint = self._retry_after_hint()
+                hint = self._retry_after_hint(n_admitted)
                 raise EngineOverloaded(
                     f"request {req.rid}: engine at max_inflight_graphs="
                     f"{self.max_inflight_graphs}; retry after {hint:.3f}s",
@@ -596,6 +631,8 @@ class InferenceEngine:
     # -- bookkeeping ---------------------------------------------------------
     def _record(self, results: list, pos: int, res: Result,
                 err: ServingError | None = None) -> None:
+        if self.device_label is not None and res.device is None:
+            res = dc_replace(res, device=self.device_label)
         results[pos] = res
         self._status_counts[res.status] += 1
         if err is not None:
@@ -607,8 +644,10 @@ class InferenceEngine:
 
         Requests are grouped by bucket and chunked into
         ``policy.max_graphs``-sized micro-batches; every request's latency
-        is its micro-batch's wall time (bucket-cold compiles included, so
-        the p99 reflects real cold-start behavior).
+        is its own enqueue -> result wall time (bucket-cold compiles and
+        time spent waiting behind earlier micro-batches of this call
+        included, so the p99 reflects what the *request* experienced, not
+        what its micro-batch cost).
 
         Never raises for a per-request cause: malformed, oversized, shed,
         expired or faulted requests come back as typed non-``ok``
@@ -621,6 +660,7 @@ class InferenceEngine:
                 "engine has no params; pass params= or call engine.init(rng)"
             )
         t_submit = time.perf_counter()
+        t_arrival = [t_submit] * len(requests)
         self._n_requests += len(requests)
         results: list[Result | None] = [None] * len(requests)
 
@@ -661,26 +701,85 @@ class InferenceEngine:
                     idxs = [admitted[j] for j in local_idxs]
                     for chunk in _chunks(idxs, self.policy.max_graphs):
                         live = self._enforce_deadlines(
-                            requests, chunk, bucket_key, t_submit, results
+                            requests, chunk, bucket_key, t_arrival, results
                         )
                         if live:
                             self._serve_batch(
-                                requests, live, bucket_key, results
+                                requests, live, bucket_key, results,
+                                t_arrival=t_arrival,
                             )
         self._wall_s += time.perf_counter() - t_submit
         if self.store is not None:
             self.store.save_profile(self.profile)
         return results  # type: ignore[return-value]
 
+    def serve_group(
+        self,
+        requests: Sequence[Request],
+        t_arrival: Sequence[float] | None = None,
+        *,
+        pre: tuple[GraphBatch, "jax.Array"] | None = None,
+    ) -> list[Result]:
+        """Serve one *pre-admitted*, same-bucket group of requests — the
+        async front-end's batching-window flush path.
+
+        The caller owns admission (the PR 6 contract puts it **before**
+        queueing, so nothing malformed, oversized or shed ever reaches a
+        window); this path re-checks nothing.  Per-request deadlines are
+        enforced here, at the window, against each request's own
+        ``t_arrival`` (its enqueue time, ``time.perf_counter()`` clock) —
+        as are the reported latencies, so a request's latency is its
+        queue wait plus its micro-batch, never the whole flush chunk.
+
+        ``pre`` is an optionally pre-assembled ``(GraphBatch, features)``
+        pair whose features the front-end already staged onto this
+        engine's device (``jax.device_put`` ahead of dispatch, so the
+        host->device transfer overlaps queueing).  It is used only when
+        every request in the group is still live — a deadline drop
+        changes the batch composition and falls back to re-assembly.
+
+        Same fault contract as :meth:`submit`: never raises for a
+        per-request cause.
+        """
+        if self.params is None:
+            raise ValueError(
+                "engine has no params; pass params= or call engine.init(rng)"
+            )
+        if not requests:
+            return []
+        t0 = time.perf_counter()
+        if t_arrival is None:
+            t_arrival = [t0] * len(requests)
+        bucket_key = self.policy.bucket_of(requests[0].graph)
+        self._n_requests += len(requests)
+        self._buckets_seen.add(bucket_key)
+        self.profile.record_request(bucket_key, len(requests))
+        results: list[Result | None] = [None] * len(requests)
+        idxs = list(range(len(requests)))
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            for chunk in _chunks(idxs, self.policy.max_graphs):
+                live = self._enforce_deadlines(
+                    requests, chunk, bucket_key, t_arrival, results
+                )
+                if live:
+                    self._serve_batch(
+                        requests, live, bucket_key, results,
+                        t_arrival=t_arrival,
+                        pre=pre if live == idxs else None,
+                    )
+        self._wall_s += time.perf_counter() - t0
+        return results  # type: ignore[return-value]
+
     def _enforce_deadlines(
-        self, requests, chunk, bucket_key, t_submit, results
+        self, requests, chunk, bucket_key, t_arrival, results
     ) -> list[int]:
         """Deadline check at batch-assembly time: expired requests fail
         with ``DeadlineExceeded`` and free their batch slots."""
         live = []
         for i in chunk:
             dl = requests[i].deadline_s
-            elapsed = time.perf_counter() - t_submit
+            elapsed = time.perf_counter() - t_arrival[i]
             if dl is not None and elapsed > dl:
                 err = DeadlineExceeded(
                     f"request {requests[i].rid}: deadline {dl:.3f}s expired "
@@ -710,23 +809,35 @@ class InferenceEngine:
         idxs: list[int],
         bucket_key: tuple[int, int],
         results: list,
+        *,
+        t_arrival: Sequence[float],
         solo: bool = False,
+        pre: tuple[GraphBatch, "jax.Array"] | None = None,
     ) -> None:
         """Assemble and execute one micro-batch down the ladder; on a
-        whole-batch fault, quarantine by re-running each member solo."""
+        whole-batch fault, quarantine by re-running each member solo.
+
+        ``pre`` skips assembly: the front-end already built the batch and
+        staged its features on this engine's device (quarantine solo
+        re-runs always re-assemble — their composition differs)."""
         t0 = time.perf_counter()
-        batch = assemble([requests[i].graph for i in idxs], self.policy)
+        if pre is not None:
+            batch, x_in = pre
+        else:
+            batch = assemble([requests[i].graph for i in idxs], self.policy)
+            x_in = batch.batch_features([requests[i].x for i in idxs])
         self.profile.record_batch(bucket_key, batch.slots)
-        xs = [requests[i].x for i in idxs]
         rids = [requests[i].rid for i in idxs]
         batch_index = self._batch_seq.get(bucket_key, 0)
         self._batch_seq[bucket_key] = batch_index + 1
 
         outs, tier_idx, n_retries, err = self._execute_ladder(
-            batch, xs, rids, bucket_key, batch_index
+            batch, x_in, rids, bucket_key, batch_index
         )
         dt = time.perf_counter() - t0
+        t_done = time.perf_counter()
         self._n_batches += 1
+        self._batch_walls.append(dt)
         if solo:
             self._n_solo_retries += 1
         self.monitor.record(self._n_batches, dt)
@@ -739,10 +850,12 @@ class InferenceEngine:
                 # block-diagonal batch computes each graph independently)
                 for i in idxs:
                     self._serve_batch(
-                        requests, [i], bucket_key, results, solo=True
+                        requests, [i], bucket_key, results,
+                        t_arrival=t_arrival, solo=True,
                     )
                 return
-            self._latencies.append(dt)
+            lat = t_done - t_arrival[idxs[0]]
+            self._latencies.append(lat)
             self._record(
                 results,
                 idxs[0],
@@ -750,7 +863,7 @@ class InferenceEngine:
                     rid=rids[0],
                     output=None,
                     bucket=bucket_key,
-                    latency_s=dt,
+                    latency_s=lat,
                     status=err.status,
                     error=str(err),
                     error_type=err.code,
@@ -765,7 +878,8 @@ class InferenceEngine:
             self._n_downgrades += 1
         status = STATUS_DEGRADED if tier_idx > 0 else STATUS_OK
         for i, o in zip(idxs, outs):
-            self._latencies.append(dt)
+            lat = t_done - t_arrival[i]
+            self._latencies.append(lat)
             self._record(
                 results,
                 i,
@@ -773,7 +887,7 @@ class InferenceEngine:
                     rid=requests[i].rid,
                     output=o,
                     bucket=bucket_key,
-                    latency_s=dt,
+                    latency_s=lat,
                     status=status,
                     tier=tier.name,
                     n_retries=n_retries,
@@ -783,25 +897,29 @@ class InferenceEngine:
     def _execute_ladder(
         self,
         batch: GraphBatch,
-        xs: list[np.ndarray],
+        x_in,
         rids: list[int],
         bucket_key: tuple[int, int],
         batch_index: int,
     ):
         """Walk the degradation ladder with bounded retries per tier.
 
+        ``x_in`` is the assembled feature block: a host ``np.ndarray`` on
+        the sync path, or a ``jax.Array`` the front-end already staged on
+        this engine's device (never donated — retries and other ladder
+        tiers must be able to reuse it).
+
         Returns ``(outputs, tier_index, n_retries, error)`` — ``error`` is
         ``None`` on success, the (taxonomy-wrapped) last failure when every
         tier is exhausted.
         """
-        x_np = batch.batch_features(xs)
         last: BaseException | None = None
         n_retries = 0
         for tier_idx, tier in enumerate(self.ladder):
             for attempt in range(self.retry.max_attempts):
                 try:
                     outs = self._attempt(
-                        batch, x_np, rids, bucket_key, batch_index, tier
+                        batch, x_in, rids, bucket_key, batch_index, tier
                     )
                     return outs, tier_idx, n_retries, None
                 except Exception as e:  # noqa: BLE001 — isolate any fault
@@ -817,7 +935,7 @@ class InferenceEngine:
     def _attempt(
         self,
         batch: GraphBatch,
-        x_np: np.ndarray,
+        x_in,
         rids: list[int],
         bucket_key: tuple[int, int],
         batch_index: int,
@@ -831,11 +949,15 @@ class InferenceEngine:
             corrupt = self.injector.on_run(
                 bucket_key, batch_index, rids, tier.name
             )
-        x = jnp.asarray(x_np)
+        staged = isinstance(x_in, jax.Array)
+        x = x_in if staged else jnp.asarray(x_in)
+        # a staged buffer must survive retries and lower ladder tiers;
+        # donating it would leave the next attempt with a dead buffer
+        donate = self.donate and not staged
         traces_before = trace_count()
         t_run = time.perf_counter()
         if self.readout is None:
-            out = bound.run(self.params, x, donate=True)
+            out = bound.run(self.params, x, donate=donate)
         else:
             # readout over the padded slot count, not n_graphs: the
             # executable shape then depends only on the bucket, so tail
@@ -847,7 +969,7 @@ class InferenceEngine:
                 segment_ids=jnp.asarray(batch.segment_ids),
                 num_segments=batch.slots,
                 readout=self.readout,
-                donate=True,
+                donate=donate,
             )
         arr = np.asarray(jax.block_until_ready(out))
         if trace_count() > traces_before:
@@ -879,6 +1001,10 @@ class InferenceEngine:
             graphs_per_sec=n / self._wall_s if self._wall_s > 0 else 0.0,
             p50_ms=float(np.percentile(lat_ms, 50)) if n else 0.0,
             p99_ms=float(np.percentile(lat_ms, 99)) if n else 0.0,
+            batch_p50_ms=(
+                float(np.median(self._batch_walls)) * 1e3
+                if self._batch_walls else 0.0
+            ),
             compile_s=self._search_s + self._trace_s,
             search_s=self._search_s,
             trace_s=self._trace_s,

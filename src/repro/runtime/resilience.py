@@ -114,6 +114,19 @@ class DeadlineExceeded(ServingError):
     code = "deadline_exceeded"
 
 
+def backlog_retry_after(
+    queue_depth: int, batch_wall_s: float, max_graphs: int
+) -> float:
+    """Backpressure hint for a shed request: the wall time the current
+    backlog needs to drain.  ``queue_depth`` graphs form
+    ``ceil(queue_depth / max_graphs)`` micro-batches (at least one), each
+    costing about the recent median ``batch_wall_s`` — so a client that
+    waits this long retries into a queue that has actually moved, instead
+    of re-colliding after one request's latency."""
+    n_batches = max(1, -(-max(0, queue_depth) // max(1, max_graphs)))
+    return float(batch_wall_s) * n_batches
+
+
 def as_serving_error(exc: BaseException) -> ServingError:
     """Wrap an arbitrary execution failure into the taxonomy (already-typed
     errors pass through)."""

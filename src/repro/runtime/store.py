@@ -42,6 +42,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 from dataclasses import asdict
 from pathlib import Path
 from typing import Iterator
@@ -121,6 +122,12 @@ class ProgramStore:
     it is *not* load-bearing: artifact paths derive from the key digest,
     so a corrupt or missing index only costs :meth:`keys` its listing
     until the next :meth:`put` rewrites it.
+
+    One store instance may back several per-device engines at once (the
+    async front-end shares it across workers), so counters, index updates
+    and profile writes are serialized by a lock; the artifact files
+    themselves were already safe under concurrency (atomic writes, derived
+    paths).
     """
 
     def __init__(self, root, *, jax_cache: bool = False):
@@ -129,6 +136,7 @@ class ProgramStore:
         self.hits = 0
         self.misses = 0
         self.corrupt = 0  # artifacts that existed but failed to load
+        self._lock = threading.Lock()
         self._index: dict[str, dict] = self._load_index()
         if jax_cache:
             # co-locate the XLA cache with the store unless the operator
@@ -185,17 +193,20 @@ class ProgramStore:
         raises for a bad artifact."""
         path = self.path_for(key)
         if not path.exists():
-            self.misses += 1
+            with self._lock:
+                self.misses += 1
             return None
         try:
             prog = Program.from_json(path.read_text())
         except Exception:
             # truncated write, garbage bytes, or a PROGRAM_FORMAT bump:
             # all of them degrade to a recompile
-            self.corrupt += 1
-            self.misses += 1
+            with self._lock:
+                self.corrupt += 1
+                self.misses += 1
             return None
-        self.hits += 1
+        with self._lock:
+            self.hits += 1
         return prog
 
     def put(self, key: dict, program: Program) -> Path:
@@ -203,8 +214,9 @@ class ProgramStore:
         digest = key_digest(key)
         path = self.root / f"{digest}{_SUFFIX}"
         program.save(path)  # Program.save is atomic
-        self._index[digest] = {"file": path.name, "key": key}
-        self._save_index()
+        with self._lock:
+            self._index[digest] = {"file": path.name, "key": key}
+            self._save_index()
         return path
 
     # -- traffic profile -----------------------------------------------------
@@ -213,7 +225,8 @@ class ProgramStore:
         return self.root / _PROFILE
 
     def save_profile(self, profile: TrafficProfile) -> Path:
-        return profile.save(self.profile_path)
+        with self._lock:
+            return profile.save(self.profile_path)
 
     def load_profile(self) -> TrafficProfile | None:
         """The persisted bucket-heat profile, or ``None`` when absent or
@@ -223,7 +236,8 @@ class ProgramStore:
         except FileNotFoundError:
             return None
         except Exception:
-            self.corrupt += 1
+            with self._lock:
+                self.corrupt += 1
             return None
 
     def stats(self) -> dict:
