@@ -36,6 +36,7 @@ MODULES = {
     "serve_chaos": serve_gnn,
     "serve_restart": serve_gnn,
     "serve_async": serve_gnn,
+    "serve_giant": serve_gnn,
     "table3": table3_validation,
     "roofline": roofline,
 }
@@ -70,6 +71,8 @@ def main() -> int:
             rows = serve_gnn.run_restart(smoke=args.fast)
         elif n == "serve_async":
             rows = serve_gnn.run_async(smoke=args.fast)
+        elif n == "serve_giant":
+            rows = serve_gnn.run_giant(smoke=args.fast)
         elif n in ("fig12", "fig13") and args.fast:
             # skip the slow scalar-loop baseline (and its speedup guard)
             rows = mod.run(with_baseline=False)

@@ -56,6 +56,19 @@ engine (all requests in one call — an oracle no real front-end sees) is
 reported alongside for context.  On this single-core container the win
 is continuous batching itself; on a multi-core host the per-device
 streams additionally overlap.
+
+``--giant`` runs the beyond-capacity lane: banded graphs whose staged
+V x F intermediate exceeds the modeled ``gb_capacity_bytes`` (a plain
+engine rejects the entire stream) are served through the partitioned
+lane — ``plan_partition`` picks ``row_stream`` under the ``edp``
+objective, L-hop halo closures stream through one shared closure-bucket
+Program, and stitched outputs must be **bit-identical**
+(``np.array_equal``) to the monolithic per-graph fallback.  Full runs
+commit ``experiments/benchmarks/serve_gnn_giant.json`` (the ranked plan
+candidates for the largest graph, partition counts, trace counts, the
+fallback comparison) and guard the wall-clock win at
+``GIANT_SPEEDUP_FLOOR`` x; ``--smoke`` serves two smaller
+beyond-capacity graphs with the same bit-identity checks (CI lane).
 """
 from __future__ import annotations
 
@@ -866,6 +879,211 @@ def run_async(smoke: bool = False):
     return rows
 
 
+# -- giant lane --------------------------------------------------------------
+#: banded giant graphs at distinct sizes spanning several pow2 buckets, so
+#: the monolithic fallback pays one XLA trace per shape while the
+#: partitioned lane reuses a single closure-bucket Program for everything.
+GIANT_SIZES = (5000, 6500, 8000, 9500, 11000, 13000)
+GIANT_SIZES_SMOKE = (3000, 4200)
+#: modeled global-buffer capacity: every giant graph's staged V x F
+#: intermediate (V * 32 * 4 bytes) exceeds it, so admission routes the
+#: whole stream to the partitioned lane.
+GIANT_CAP_BYTES = 256 * 1024
+GIANT_MAX_NODES = 2048  # admission cap == the closure bucket's ceiling
+GIANT_SPEEDUP_FLOOR = 1.5
+GIANT_SCHEDULE = ModelSchedule.from_policies("sp_opt", "AC", DIMS)
+
+
+def make_giant_stream(sizes, seed: int = SEED) -> list[Request]:
+    """Banded (ring +/-1) giant graphs: tiny halos, honest row_stream win."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, v in enumerate(sizes):
+        rows = np.repeat(np.arange(v), 2)
+        cols = (rows + np.tile(np.array([-1, 1]), v)) % v
+        g = from_edges(v, rows, cols)
+        x = rng.normal(size=(v, DIMS[0][0])).astype(np.float32)
+        reqs.append(Request(graph=g, x=x, rid=i))
+    return reqs
+
+
+def _naive_giant(requests, params, schedule: ModelSchedule):
+    """The monolithic fallback the partitioned lane replaces: compile the
+    whole beyond-capacity graph as one Program per request (schedule given
+    for free) and run it.  Every distinct V pays its own XLA trace."""
+    outs = []
+    t0 = time.perf_counter()
+    for req in requests:
+        wls = [
+            GNNLayerWorkload(req.graph.nnz, fi, fo, name=f"layer{i}")
+            for i, (fi, fo) in enumerate(DIMS)
+        ]
+        prog = repro.compile(wls, graph=req.graph, schedule=schedule)
+        logits = prog.run(params, jax.numpy.asarray(req.x))
+        outs.append(np.asarray(jax.block_until_ready(logits)))
+    return outs, time.perf_counter() - t0
+
+
+def run_giant(smoke: bool = False):
+    """The beyond-capacity lane: spill-model-planned partitioned serving
+    vs the monolithic per-graph fallback, bit-identical outputs.
+
+    Every request's staged intermediate exceeds the modeled
+    ``gb_capacity_bytes``, so a plain engine would reject it and the only
+    alternative is one monolithic compile+run per graph.  The partitioned
+    engine instead plans once per bucket (``plan_partition`` under the
+    ``edp`` objective), streams L-hop halo closures through a single
+    shared closure-bucket Program, and stitches ``[:n_own]`` slices —
+    outputs must be **bit-identical** to the monolithic fallback
+    (``np.array_equal``), and the full lane guards the wall-clock win at
+    ``GIANT_SPEEDUP_FLOOR`` x after the evidence JSON lands.
+    """
+    import dataclasses
+
+    from repro.core.hw import DEFAULT_ACCEL
+    from repro.graphs.partition import plan_partition
+
+    sizes = GIANT_SIZES_SMOKE if smoke else GIANT_SIZES
+    n = len(sizes)
+    requests = make_giant_stream(sizes)
+    hw = dataclasses.replace(DEFAULT_ACCEL, gb_capacity_bytes=GIANT_CAP_BYTES)
+    policy = BucketPolicy(max_nodes=GIANT_MAX_NODES)
+
+    env_root = os.environ.get("REPRO_STORE_DIR")
+    store = (
+        ProgramStore(Path(env_root).expanduser(), jax_cache=True)
+        if env_root else None
+    )
+    engine = InferenceEngine(
+        DIMS,
+        policy=policy,
+        hw=hw,
+        schedule=GIANT_SCHEDULE,
+        objective="edp",
+        partition_oversized=True,
+        readout=None,
+        store=store,
+    )
+    params = engine.init(jax.random.PRNGKey(0))
+
+    # a plain engine under the same capacity rejects the whole stream —
+    # that's the gap this lane closes
+    plain = InferenceEngine(
+        DIMS, params, policy=policy, hw=hw, schedule=GIANT_SCHEDULE,
+        store=None,
+    )
+    n_rejected = sum(
+        int(r.status == "rejected") for r in plain.submit(requests)
+    )
+    if n_rejected != n:
+        raise RuntimeError(
+            f"giant: plain engine rejected {n_rejected}/{n} beyond-capacity "
+            f"requests; the stream must be inadmissible without partitioning"
+        )
+
+    tc0 = repro.trace_count()
+    t0 = time.perf_counter()
+    results = engine.submit(requests)
+    part_s = time.perf_counter() - t0
+    part_traces = repro.trace_count() - tc0
+    stats = engine.stats()
+    for res in results:
+        if res.status != "ok":
+            raise RuntimeError(
+                f"giant: rid {res.rid} ended {res.status}: {res.error}"
+            )
+        if res.plan != "row_stream" or res.n_partitions < 2:
+            raise RuntimeError(
+                f"giant: rid {res.rid} served as {res.plan} with "
+                f"{res.n_partitions} partitions; expected a multi-partition "
+                f"row_stream plan"
+            )
+
+    # steady state: same stream again — plans and the shared closure
+    # Program are cached, so the warm pass must take zero new traces
+    tc0 = repro.trace_count()
+    t0 = time.perf_counter()
+    engine.submit(requests)
+    warm_s = time.perf_counter() - t0
+    warm_traces = repro.trace_count() - tc0
+    if warm_traces != 0:
+        raise RuntimeError(
+            f"giant: warm partitioned stream took {warm_traces} new traces"
+        )
+
+    naive_outs, naive_s = _naive_giant(requests, params, GIANT_SCHEDULE)
+    n_identical = sum(
+        int(np.array_equal(np.asarray(results[i].output), naive_outs[i]))
+        for i in range(n)
+    )
+    if n_identical != n:
+        raise RuntimeError(
+            f"giant: only {n_identical}/{n} partitioned outputs "
+            f"bit-identical to the monolithic fallback"
+        )
+
+    speedup = naive_s / part_s
+    total_parts = sum(r.n_partitions for r in results)
+    rows = [
+        ("serve/giant_partitioned", part_s / n * 1e6,
+         f"graphs={n};partitions={total_parts};traces={part_traces};"
+         f"plans={','.join(sorted(stats.partition_plans))};"
+         f"search_s={stats.search_s:.2f}"),
+        ("serve/giant_warm", warm_s / n * 1e6,
+         f"traces={warm_traces}"),
+        ("serve/giant_naive", naive_s / n * 1e6,
+         f"graphs={n}"),
+        ("serve/giant_speedup", 0.0,
+         f"x{speedup:.1f};bit_identical={n_identical}/{n};"
+         f"rejected_without_flag={n_rejected}/{n}"),
+    ]
+
+    if not smoke:
+        biggest = requests[-1].graph
+        plan = plan_partition(
+            biggest, DIMS, hw, objective="edp", allow_monolithic=False,
+            max_block_rows=GIANT_MAX_NODES,
+        )
+        save_json("serve_gnn_giant", {
+            "stream": {
+                "sizes": list(sizes),
+                "dims": [list(d) for d in DIMS],
+                "seed": SEED,
+                "gb_capacity_bytes": GIANT_CAP_BYTES,
+                "max_nodes_cap": GIANT_MAX_NODES,
+            },
+            "admission": {
+                "rejected_without_flag": n_rejected,
+                "footprint_bytes_largest": plan.footprint_bytes,
+            },
+            "plan_largest": plan.as_dict(),
+            "partitioned": {
+                **stats.as_dict(),
+                "wall_s": part_s,
+                "us_per_graph": part_s / n * 1e6,
+                "traces": part_traces,
+                "warm_wall_s": warm_s,
+                "warm_us_per_graph": warm_s / n * 1e6,
+                "warm_traces": warm_traces,
+                "total_partitions": total_parts,
+            },
+            "naive_monolithic": {
+                "wall_s": naive_s,
+                "us_per_graph": naive_s / n * 1e6,
+            },
+            "speedup": speedup,
+            "speedup_floor": GIANT_SPEEDUP_FLOOR,
+            "n_bit_identical": n_identical,
+        })
+        # guard after the evidence lands, same policy as every lane
+        if speedup < GIANT_SPEEDUP_FLOOR:
+            raise RuntimeError(
+                f"giant: partitioned serving only x{speedup:.2f} vs the "
+                f"monolithic fallback (floor x{GIANT_SPEEDUP_FLOOR:.1f})"
+            )
+    return rows
+
+
 def main(argv: list[str] | None = None) -> int:
     import argparse
 
@@ -882,8 +1100,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="continuous-batching lane: AsyncEngine over "
                          "forced host devices vs the per-arrival sync "
                          "front-end; p99 must track the batching window")
+    ap.add_argument("--giant", action="store_true",
+                    help="beyond-capacity lane: spill-model-planned "
+                         "partitioned serving vs the monolithic fallback; "
+                         "outputs bit-identical, wall-clock guarded")
     args = ap.parse_args(argv)
-    if args.async_:
+    if args.giant:
+        rows = run_giant(smoke=args.smoke)
+    elif args.async_:
         rows = run_async(smoke=args.smoke)
     elif args.restart:
         rows = run_restart(smoke=args.smoke)

@@ -859,6 +859,108 @@ def transition_cost(
     )
 
 
+# ---------------------------------------------------------------------------
+# Partitioned execution: footprint + inter-partition communication costs
+# ---------------------------------------------------------------------------
+
+
+def intermediate_footprint_bytes(
+    v: int, f: int, hw: AcceleratorConfig = DEFAULT_ACCEL
+) -> int:
+    """Bytes of the staged V x F intermediate for non-fused strategies.
+
+    This is the quantity the spill model in :func:`simulate` compares
+    against ``gb_capacity_bytes`` for Seq-family buffering, and what
+    admission control / the partition planner use to agree on what
+    "oversized" means for a graph."""
+    return int(v) * int(f) * int(hw.bytes_per_elem)
+
+
+PARTITION_KINDS = ("monolithic", "feature_chunk", "row_stream", "pp_shard")
+
+
+@dataclass(frozen=True)
+class PartitionCommStats:
+    """Inter-partition traffic for one partitioned-execution plan.
+
+    Mirrors :class:`TransitionStats`: an additive cost layered on top of
+    the per-layer :func:`simulate` numbers, so the scalar/vector parity
+    of the per-strategy paths is untouched.  Pricing follows the
+    communication-requirements model (arXiv:2103.10515): every element
+    crossing a partition boundary is one read at the producer plus one
+    write at the consumer, serialized at the GB bandwidth; traffic whose
+    working set cannot be GB-resident is DRAM-priced (arXiv:2404.15510's
+    off-chip halo gathers).
+    """
+
+    kind: str  # one of PARTITION_KINDS
+    n_partitions: int
+    elems: float  # elements crossing partition boundaries
+    gb_accesses: float  # accesses billed at GB energy
+    dram_accesses: float  # accesses billed at DRAM energy
+    cycles: float
+    energy_pj: float
+
+    def objective(self, name: str) -> float:
+        """Additive objective contribution (plan ranking uses this)."""
+        obj = get_objective(name)
+        if not obj.additive:
+            raise ValueError(
+                f"partition comm costs only support additive objectives "
+                f"{objective_names(additive_only=True)}, got {name!r}"
+            )
+        return obj.fn(self.cycles, self.energy_pj)
+
+
+def partition_comm_cost(
+    kind: str,
+    n_partitions: int,
+    *,
+    v: int,
+    f: int,
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    halo_elems: int = 0,
+) -> PartitionCommStats:
+    """Price the inter-partition traffic of one execution plan.
+
+    - ``monolithic``: zero — any spill traffic is already priced inside
+      each layer's :func:`simulate` (the PR-4 footprint/spill model).
+    - ``row_stream``: the halo features gathered per node block come from
+      DRAM (the full feature matrix cannot be GB-resident, which is why
+      we partitioned): ``2 * halo_elems`` DRAM accesses.
+    - ``feature_chunk``: the V x F intermediate round-trips through DRAM
+      once per chunk boundary pass: ``2 * v * f`` DRAM accesses.
+    - ``pp_shard``: the intermediate crosses the device mesh once per
+      boundary, GB/NoC-priced: ``2 * v * f`` GB accesses.
+    """
+    if kind not in PARTITION_KINDS:
+        raise ValueError(f"unknown partition kind {kind!r}; expected {PARTITION_KINDS}")
+    if n_partitions < 1:
+        raise ValueError(f"n_partitions must be >= 1, got {n_partitions}")
+    if kind == "monolithic" or n_partitions == 1:
+        return PartitionCommStats(kind, n_partitions, 0.0, 0.0, 0.0, 0.0, 0.0)
+    if kind == "row_stream":
+        elems = float(halo_elems)
+        gb_acc, dram_acc = 0.0, 2.0 * elems
+    elif kind == "feature_chunk":
+        elems = float(v) * float(f)
+        gb_acc, dram_acc = 0.0, 2.0 * elems
+    else:  # pp_shard
+        elems = float(v) * float(f)
+        gb_acc, dram_acc = 2.0 * elems, 0.0
+    accesses = gb_acc + dram_acc
+    energy = gb_acc * hw.gb_energy_pj + dram_acc * hw.dram_energy_pj
+    return PartitionCommStats(
+        kind,
+        n_partitions,
+        elems=elems,
+        gb_accesses=gb_acc,
+        dram_accesses=dram_acc,
+        cycles=accesses / float(hw.gb_bandwidth),
+        energy_pj=energy,
+    )
+
+
 @dataclass
 class ModelStats:
     """End-to-end statistics for a multi-layer GNN schedule."""

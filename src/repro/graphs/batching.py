@@ -63,8 +63,22 @@ class BucketPolicy:
     max_nodes: int | None = None
     max_degree: int | None = None
 
-    def oversized_reason(self, g: CSRGraph) -> str | None:
-        """Why ``g`` exceeds the admission caps, or ``None`` if it fits."""
+    def oversized_reason(
+        self,
+        g: CSRGraph,
+        *,
+        f: int | None = None,
+        hw=None,
+    ) -> str | None:
+        """Why ``g`` exceeds the admission caps, or ``None`` if it fits.
+
+        With ``f`` (the model's widest layer dimension) and ``hw`` (an
+        :class:`~repro.core.hw.AcceleratorConfig`), the check also prices
+        the bucketed graph's staged V x f intermediate against
+        ``gb_capacity_bytes`` — the same footprint the simulator's spill
+        model charges DRAM energy for — so admission and the partition
+        planner agree on what "oversized" means.
+        """
         if self.max_nodes is not None and g.n_nodes > self.max_nodes:
             return (
                 f"graph has {g.n_nodes} nodes, over the policy cap "
@@ -75,6 +89,17 @@ class BucketPolicy:
                 f"graph has max degree {g.max_degree}, over the policy cap "
                 f"max_degree={self.max_degree}"
             )
+        if f is not None and hw is not None and hw.gb_capacity_bytes is not None:
+            from ..core.simulator import intermediate_footprint_bytes
+
+            fb = intermediate_footprint_bytes(self.node_bucket(g.n_nodes), f, hw)
+            if fb > hw.gb_capacity_bytes:
+                return (
+                    f"staged intermediate is {fb} bytes "
+                    f"({self.node_bucket(g.n_nodes)} bucketed nodes x {f} "
+                    f"features), over gb_capacity_bytes="
+                    f"{hw.gb_capacity_bytes}"
+                )
         return None
 
     def node_bucket(self, n_nodes: int) -> int:

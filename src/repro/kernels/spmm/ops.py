@@ -3,6 +3,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..common import cdiv, default_interpret
 from .kernel import spmm_ell as _raw
@@ -21,3 +22,32 @@ def spmm(indices, weights, x, block_v=128, block_f=128):
     out = _raw(idx, wts, xp, block_v=bv, block_f=bf,
                interpret=default_interpret())
     return out[:v_pad, :f]
+
+
+def spmm_streamed(indices, weights, x, *, block_rows=4096,
+                  block_v=128, block_f=128):
+    """Row-streamed SpMM for feature tables too large to stage at once.
+
+    Splits the ELL rows into ``block_rows`` slabs; each slab gathers only
+    the feature rows it references (the halo gather) and runs :func:`spmm`
+    on the compact table, so the per-call working set is bounded by the
+    slab's closure instead of the full V x F matrix.  Rows are independent,
+    so the concatenated result is bit-identical to
+    ``spmm(indices, weights, x)``.
+    """
+    v_pad = indices.shape[0]
+    if v_pad <= block_rows:
+        return spmm(indices, weights, x, block_v=block_v, block_f=block_f)
+    idx_h = np.asarray(indices)
+    outs = []
+    for s in range(0, v_pad, block_rows):
+        blk = idx_h[s:s + block_rows]
+        uniq, inv = np.unique(blk, return_inverse=True)
+        outs.append(spmm(
+            jnp.asarray(inv.reshape(blk.shape).astype(idx_h.dtype)),
+            weights[s:s + block_rows],
+            x[uniq],
+            block_v=block_v,
+            block_f=block_f,
+        ))
+    return jnp.concatenate(outs, axis=0)

@@ -69,6 +69,7 @@ from ..graphs.batching import (
     TrafficProfile,
     assemble,
     bucketize,
+    next_pow2,
 )
 from ..graphs.csr import CSRGraph, block_diagonal, from_edges
 from .fault_tolerance import StragglerMonitor
@@ -134,6 +135,13 @@ class Result:
     #: which device served this request (the engine's ``device_label``;
     #: the async front-end sets one per worker).  ``None`` = default.
     device: str | None = None
+    #: partitioned-lane telemetry: how many partitions served this
+    #: request (0 = the normal batched path), the partitioned wall
+    #: clock, and the planner's chosen plan kind
+    #: (``row_stream`` / ``feature_chunk`` / ``pp_shard``).
+    n_partitions: int = 0
+    partition_wall_s: float = 0.0
+    plan: str | None = None
 
     @property
     def ok(self) -> bool:
@@ -181,6 +189,9 @@ class EngineStats:
     n_stragglers: int = 0  # micro-batches flagged by the StragglerMonitor
     errors: dict = field(default_factory=dict)  # taxonomy code -> count
     batch_p50_ms: float = 0.0  # median micro-batch wall (drain-rate probe)
+    n_partitioned: int = 0  # oversized requests served via a partition plan
+    partition_wall_s: float = 0.0  # wall spent inside the partitioned lane
+    partition_plans: dict = field(default_factory=dict)  # plan kind -> count
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -300,6 +311,8 @@ class InferenceEngine:
         store: ProgramStore | None = None,
         donate: bool = True,
         device_label: str | None = None,
+        partition_oversized: bool = False,
+        max_partitions: int = 256,
     ):
         self.dims = [(int(fi), int(fo)) for fi, fo in dims]
         if not self.dims:
@@ -330,6 +343,12 @@ class InferenceEngine:
         #: stamped on every Result this engine produces (the async
         #: front-end labels each per-device engine with its jax device).
         self.device_label = device_label
+        #: serve oversized admissions through a planner-chosen partition
+        #: (:func:`repro.graphs.partition.plan_partition`) instead of a
+        #: typed rejection.  Off by default: the PR 6 rejection contract
+        #: stays intact unless a deployment opts in.
+        self.partition_oversized = partition_oversized
+        self.max_partitions = max_partitions
         self.monitor = monitor if monitor is not None else StragglerMonitor()
         self.cache = ProgramCache(cache_capacity)
         #: optional persistent backing for the program cache: a miss here
@@ -368,6 +387,12 @@ class InferenceEngine:
         #: per-bucket micro-batch sequence numbers (fault-injection plans
         #: target (bucket, batch_index); solo-retry batches get their own)
         self._batch_seq: dict[tuple[int, int], int] = {}
+        #: partition plans keyed by the graph's nominal bucket — planning
+        #: (a few mapper searches) is paid once per oversized shape class
+        self._plans: dict[tuple[int, int], "PartitionPlan"] = {}
+        self._n_partitioned = 0
+        self._partition_wall_s = 0.0
+        self._partition_plans: dict[str, int] = {}
 
     @property
     def f_in(self) -> int:
@@ -608,10 +633,18 @@ class InferenceEngine:
             queue_depth, self.median_batch_wall(), self.policy.max_graphs
         )
 
+    def oversized_reason(self, graph: CSRGraph) -> str | None:
+        """Why ``graph`` exceeds this engine's admission limits, or
+        ``None`` — the policy caps plus the simulator's footprint check
+        against ``hw.gb_capacity_bytes`` (the widest served layer sets
+        the staged-intermediate width)."""
+        f_max = max(max(fi, fo) for fi, fo in self.dims)
+        return self.policy.oversized_reason(graph, f=f_max, hw=self.hw)
+
     def _admission_error(self, req: Request, n_admitted: int) -> ServingError | None:
         try:
             validate_request(req, self.f_in)
-            reason = self.policy.oversized_reason(req.graph)
+            reason = self.oversized_reason(req.graph)
             if reason is not None:
                 raise OversizedGraph(f"request {req.rid}: {reason}")
             if (
@@ -665,10 +698,13 @@ class InferenceEngine:
         results: list[Result | None] = [None] * len(requests)
 
         admitted: list[int] = []
+        partitioned: list[int] = []
         for pos, req in enumerate(requests):
             err = self._admission_error(req, len(admitted))
             if err is None:
                 admitted.append(pos)
+            elif self.partition_oversized and isinstance(err, OversizedGraph):
+                partitioned.append(pos)
             else:
                 self._record(
                     results,
@@ -708,6 +744,15 @@ class InferenceEngine:
                                 requests, live, bucket_key, results,
                                 t_arrival=t_arrival,
                             )
+        if partitioned:
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers"
+                )
+                for pos in partitioned:
+                    self._serve_partitioned(
+                        requests, pos, results, t_arrival[pos]
+                    )
         self._wall_s += time.perf_counter() - t_submit
         if self.store is not None:
             self.store.save_profile(self.profile)
@@ -770,6 +815,243 @@ class InferenceEngine:
                     )
         self._wall_s += time.perf_counter() - t0
         return results  # type: ignore[return-value]
+
+    # -- partitioned lane ----------------------------------------------------
+    def serve_partitioned(
+        self, req: Request, t_arrival: float | None = None
+    ) -> Result:
+        """Serve one oversized request through the partitioned lane.
+
+        The async front-end dispatches these as standalone worker items
+        (they never join a batching window); same fault contract as
+        :meth:`submit` — a planning or execution failure comes back as a
+        typed non-``ok`` :class:`Result`, never an exception.
+        """
+        if self.params is None:
+            raise ValueError(
+                "engine has no params; pass params= or call engine.init(rng)"
+            )
+        t0 = time.perf_counter()
+        results: list[Result | None] = [None]
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            self._serve_partitioned(
+                [req], 0, results, t_arrival if t_arrival is not None else t0
+            )
+        self._n_requests += 1
+        self._wall_s += time.perf_counter() - t0
+        if self.store is not None:
+            self.store.save_profile(self.profile)
+        return results[0]
+
+    def _plan_for(self, graph: CSRGraph):
+        """The cached partition plan for this graph's shape class."""
+        key = self.policy.bucket_of(graph)
+        plan = self._plans.get(key)
+        if plan is None:
+            from ..graphs.partition import plan_partition
+
+            # a device-pinned worker engine (async front-end) must not
+            # claim the whole mesh for a pp shard
+            n_devices = 1 if self.device_label is not None else len(jax.devices())
+            t0 = time.perf_counter()
+            plan = plan_partition(
+                graph,
+                self.dims,
+                self.hw,
+                objective=self.objective,
+                n_devices=n_devices,
+                allow_monolithic=False,
+                max_partitions=self.max_partitions,
+                max_block_rows=self.policy.max_nodes,
+            )
+            self._search_s += time.perf_counter() - t0
+            self._plans[key] = plan
+        return plan
+
+    def _serve_partitioned(
+        self, requests, pos: int, results: list, t_arr: float
+    ) -> None:
+        """Plan and execute one oversized request; records the Result."""
+        req = requests[pos]
+        t0 = time.perf_counter()
+        dl = req.deadline_s
+        if dl is not None and (t0 - t_arr) > dl:
+            err = DeadlineExceeded(
+                f"request {req.rid}: deadline {dl:.3f}s expired "
+                f"({t0 - t_arr:.3f}s elapsed) before partitioned execution"
+            )
+            self._record(
+                results, pos,
+                Result(
+                    rid=req.rid, output=None, bucket=None,
+                    latency_s=t0 - t_arr, status=STATUS_FAILED,
+                    error=str(err), error_type=err.code,
+                ),
+                err,
+            )
+            return
+        bucket_key = self.policy.bucket_of(req.graph)
+        try:
+            plan = self._plan_for(req.graph)
+        except ValueError as e:
+            err = OversizedGraph(f"request {req.rid}: {e}")
+            self._record(
+                results, pos,
+                Result(
+                    rid=req.rid, output=None, bucket=bucket_key,
+                    latency_s=time.perf_counter() - t_arr,
+                    status=err.status, error=str(err), error_type=err.code,
+                ),
+                err,
+            )
+            return
+
+        out, n_parts, tier_idx, n_retries, err = (
+            self._execute_partitioned_ladder(req, plan)
+        )
+        wall = time.perf_counter() - t0
+        lat = time.perf_counter() - t_arr
+        self._latencies.append(lat)
+        self._n_partitioned += 1
+        self._partition_wall_s += wall
+        self._partition_plans[plan.kind] = (
+            self._partition_plans.get(plan.kind, 0) + 1
+        )
+        if err is not None:
+            self._record(
+                results, pos,
+                Result(
+                    rid=req.rid, output=None, bucket=bucket_key,
+                    latency_s=lat, status=err.status, error=str(err),
+                    error_type=err.code, n_retries=n_retries,
+                    n_partitions=n_parts, partition_wall_s=wall,
+                    plan=plan.kind,
+                ),
+                err,
+            )
+            return
+        if tier_idx > 0:
+            self._n_downgrades += 1
+        tier = self.ladder[tier_idx]
+        self._record(
+            results, pos,
+            Result(
+                rid=req.rid, output=out, bucket=bucket_key, latency_s=lat,
+                status=STATUS_DEGRADED if tier_idx > 0 else STATUS_OK,
+                tier=tier.name, n_retries=n_retries,
+                n_partitions=n_parts, partition_wall_s=wall, plan=plan.kind,
+            ),
+        )
+
+    def _execute_partitioned_ladder(self, req: Request, plan):
+        """Walk the degradation ladder around the whole partition loop
+        (the PR 6 retry/downgrade contract, per oversized request)."""
+        last: BaseException | None = None
+        n_retries = 0
+        n_parts = plan.n_partitions
+        for tier_idx, tier in enumerate(self.ladder):
+            for attempt in range(self.retry.max_attempts):
+                try:
+                    out, n_parts = self._execute_partitioned(req, plan, tier)
+                    return out, n_parts, tier_idx, n_retries, None
+                except Exception as e:  # noqa: BLE001 — isolate any fault
+                    last = e
+                    if attempt < self.retry.max_retries:
+                        n_retries += 1
+                        self._n_retries += 1
+                        self.retry.sleep_for(attempt)
+        assert last is not None
+        return (
+            None, n_parts, len(self.ladder) - 1, n_retries,
+            as_serving_error(last),
+        )
+
+    def _execute_partitioned(self, req: Request, plan, tier: Tier):
+        """Execute one oversized request under its plan on one tier.
+
+        ``row_stream`` streams halo closures through store-backed
+        Programs: all partitions share one (closure-bucket) Program, each
+        is bound and launched without blocking — JAX's async dispatch
+        double-buffers the next partition's host-side halo gather against
+        the device compute — and the per-partition ``[:n_own]`` node
+        slices stitch back bit-identically to the whole-graph forward.
+        Returns ``(output, n_partitions)``.
+        """
+        g = req.graph
+        x_full = np.asarray(req.x)
+        if plan.kind == "row_stream":
+            from ..graphs.partition import extract_row_partitions
+
+            parts = extract_row_partitions(g, plan.block_rows, plan.n_hops)
+            d_bucket = self.policy.degree_bucket(g.max_degree)
+            v_max = max(p.graph.n_nodes for p in parts)
+            sub_policy = BucketPolicy(
+                min_nodes=next_pow2(v_max), min_degree=d_bucket, max_graphs=1
+            )
+            prog = None
+            pending = []
+            traces_before = trace_count()
+            t_run = time.perf_counter()
+            for part in parts:
+                batch = assemble([part.graph], sub_policy)
+                if prog is None:
+                    self._buckets_seen.add((batch.v_bucket, batch.d_bucket))
+                    self.profile.record_request(
+                        (batch.v_bucket, batch.d_bucket), 1
+                    )
+                    prog = self._program_for(batch, tier)
+                self.profile.record_batch(
+                    (batch.v_bucket, batch.d_bucket), batch.slots
+                )
+                bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
+                x_in = jnp.asarray(batch.batch_features([x_full[part.nodes]]))
+                # enqueue without blocking: the device crunches this
+                # partition while the host gathers the next one's halo
+                pending.append(
+                    (bound.run(self.params, x_in, donate=False), part.n_own)
+                )
+            slices = [
+                np.asarray(jax.block_until_ready(o))[:n_own]
+                for o, n_own in pending
+            ]
+            if trace_count() > traces_before:
+                self._trace_s += time.perf_counter() - t_run
+            h = np.concatenate(slices, axis=0)
+            n_parts = len(parts)
+        elif plan.kind == "feature_chunk":
+            from ..graphs.partition import feature_chunk_forward
+
+            h = feature_chunk_forward(
+                g, x_full, self.params, kind=self.kind, chunk_f=plan.chunk_f
+            )
+            n_parts = plan.n_partitions
+        elif plan.kind == "pp_shard":
+            from ..graphs.partition import pp_shard_forward
+
+            h = pp_shard_forward(
+                g, x_full, self.params, kind=self.kind,
+                n_devices=plan.n_partitions,
+            )
+            n_parts = plan.n_partitions
+        else:
+            raise ValueError(f"unexpected partition plan kind {plan.kind!r}")
+        if self.check_numerics and not np.isfinite(h).all():
+            raise NumericalFault(
+                f"non-finite values in partitioned output of request "
+                f"{req.rid} (plan {plan.kind}, tier {tier.name})"
+            )
+        if self.readout is None:
+            return h, n_parts
+        from ..gnn.layers import segment_readout
+
+        seg = jnp.zeros(h.shape[0], dtype=jnp.int32)
+        out = np.asarray(
+            jax.block_until_ready(
+                segment_readout(jnp.asarray(h), seg, 1, reduce=self.readout)
+            )
+        )
+        return out[0], n_parts
 
     def _enforce_deadlines(
         self, requests, chunk, bucket_key, t_arrival, results
@@ -1024,4 +1306,7 @@ class InferenceEngine:
             n_solo_retries=self._n_solo_retries,
             n_stragglers=len(self.monitor.flagged),
             errors=dict(self._errors),
+            n_partitioned=self._n_partitioned,
+            partition_wall_s=self._partition_wall_s,
+            partition_plans=dict(self._partition_plans),
         )

@@ -436,7 +436,7 @@ class AsyncEngine:
     def _admission_error(self, req: Request) -> ServingError | None:
         try:
             validate_request(req, self.f_in)
-            reason = self.policy.oversized_reason(req.graph)
+            reason = self.workers[0].engine.oversized_reason(req.graph)
             if reason is not None:
                 raise OversizedGraph(f"request {req.rid}: {reason}")
             if (
@@ -479,12 +479,28 @@ class AsyncEngine:
         fut: "Future[Result]" = Future()
         t_arrival = time.perf_counter()
         flush_now: tuple[int, list] | None = None
+        part_widx: int | None = None
         with self._lock:
             if self._wall_t0 is None:
                 self._wall_t0 = t_arrival
             self._n_requests += 1
             err = self._admission_error(req)
-            if err is not None:
+            if (
+                err is not None
+                and isinstance(err, OversizedGraph)
+                and self.workers[0].engine.partition_oversized
+            ):
+                # beyond-capacity single graph: route to the partitioned
+                # lane on the least-loaded device instead of rejecting
+                res = None
+                self._inflight += 1
+                self._max_inflight = max(self._max_inflight, self._inflight)
+                part_widx = min(
+                    range(len(self.workers)),
+                    key=lambda i: self.placer.outstanding[i],
+                )
+                self.placer.outstanding[part_widx] += 1
+            elif err is not None:
                 lat = time.perf_counter() - t_arrival
                 res = Result(
                     rid=req.rid,
@@ -518,6 +534,18 @@ class AsyncEngine:
                     flush_now = self._flush_locked(bucket, "full")
         if res is not None:
             fut.set_result(res)  # outside the lock
+        elif part_widx is not None:
+            worker = self.workers[part_widx]
+            done: "Future[Result]" = Future()
+            done.add_done_callback(
+                self._make_partition_resolver(part_widx, fut)
+            )
+            worker.dispatch((
+                "call",
+                lambda e=worker.engine, r=req, t=t_arrival:
+                    e.serve_partitioned(r, t),
+                done,
+            ))
         elif flush_now is not None:
             self._stage_and_dispatch(*flush_now)
         return fut
@@ -594,6 +622,20 @@ class AsyncEngine:
                 return
             for f, r in zip(futures, results):
                 f.set_result(r)
+
+        return _resolve
+
+    def _make_partition_resolver(self, widx: int, fut: "Future"):
+        def _resolve(done: "Future") -> None:
+            exc = done.exception()
+            with self._lock:
+                self._inflight -= 1
+                self.placer.done(widx, 1)
+                self._wall_t1 = time.perf_counter()
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(done.result())
 
         return _resolve
 

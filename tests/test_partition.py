@@ -1,0 +1,501 @@
+"""Beyond-capacity execution tests (PR 9).
+
+Covers the four layers of the partitioned-serving stack:
+
+- the simulator's additive communication term (``partition_comm_cost``)
+  and the staged-intermediate footprint used by admission,
+- the spill-model-driven planner (``plan_partition``) and the halo
+  closure extractor it drives,
+- bit-exactness of the ``row_stream`` lane: stitching per-partition
+  ``[:n_own]`` slices reproduces the whole-graph forward **bitwise**
+  (``np.array_equal``) across policies, orders, and model kinds — rows
+  are independent reductions, so per-row results don't depend on which
+  other rows share the launch,
+- the serving integration: the sync engine's partitioned lane and the
+  async front-end's diversion of oversized arrivals.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import GNNLayerWorkload
+from repro.core.hw import DEFAULT_ACCEL
+from repro.core.schedule import ExecSpec, ModelSchedule
+from repro.core.simulator import (
+    PARTITION_KINDS,
+    intermediate_footprint_bytes,
+    partition_comm_cost,
+)
+from repro.gnn.layers import EllAdjacency, init_layer
+from repro.gnn.model import forward_layers
+from repro.graphs import BucketPolicy, from_edges
+from repro.graphs.partition import (
+    extract_row_partitions,
+    feature_chunk_forward,
+    plan_partition,
+    row_stream_forward,
+)
+from repro.runtime.engine import InferenceEngine, Request
+from repro.runtime.scheduler import AsyncEngine
+
+DIMS = [(16, 16), (16, 8)]
+
+
+def band_graph(v: int, seed: int = 0) -> "repro.graphs.CSRGraph":
+    """Ring-of-bands graph: every row touches its +/-1 neighbours, so
+    closures stay small and row-streaming is the planner's honest win."""
+    rows = np.repeat(np.arange(v), 2)
+    cols = (rows + np.tile(np.array([-1, 1]), v)) % v
+    return from_edges(v, rows, cols)
+
+
+def dense_block_graph(v: int, seed: int = 0) -> "repro.graphs.CSRGraph":
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, v, size=v * 8)
+    cols = rng.integers(0, v, size=v * 8)
+    return from_edges(v, rows, cols)
+
+
+def make_params(kind: str, dims=DIMS, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(dims))
+    return [init_layer(kind, k, fi, fo) for k, (fi, fo) in zip(keys, dims)]
+
+
+def features(g, f_in: int = DIMS[0][0], seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((g.n_nodes, f_in)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Simulator: communication term + footprint
+# ---------------------------------------------------------------------------
+
+
+class TestCommCost:
+    def test_monolithic_is_free(self):
+        c = partition_comm_cost("monolithic", 1, v=1000, f=64)
+        assert c.cycles == 0 and c.energy_pj == 0 and c.elems == 0
+
+    def test_single_partition_is_free_for_every_kind(self):
+        for kind in PARTITION_KINDS:
+            c = partition_comm_cost(kind, 1, v=1000, f=64)
+            assert c.energy_pj == 0, kind
+
+    def test_row_stream_prices_halo_round_trip_in_dram(self):
+        hw = DEFAULT_ACCEL
+        c = partition_comm_cost("row_stream", 4, v=1000, f=32, halo_elems=500)
+        assert c.dram_accesses == 2 * 500
+        assert c.gb_accesses == 0
+        assert c.energy_pj == pytest.approx(2 * 500 * hw.dram_energy_pj)
+
+    def test_pp_shard_stays_on_chip(self):
+        c = partition_comm_cost("pp_shard", 2, v=1000, f=32)
+        assert c.dram_accesses == 0
+        assert c.gb_accesses == 2 * 1000 * 32
+
+    def test_feature_chunk_spills_full_intermediate(self):
+        c = partition_comm_cost("feature_chunk", 3, v=100, f=48)
+        assert c.dram_accesses == 2 * 100 * 48
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            partition_comm_cost("diagonal", 2, v=10, f=4)
+
+    def test_non_additive_objective_rejected(self):
+        c = partition_comm_cost("row_stream", 2, v=10, f=4, halo_elems=8)
+        with pytest.raises(ValueError):
+            c.objective("edp")
+
+    def test_footprint_scales_with_v_and_f(self):
+        hw = DEFAULT_ACCEL
+        assert (
+            intermediate_footprint_bytes(100, 32, hw)
+            == 100 * 32 * hw.bytes_per_elem
+        )
+
+
+# ---------------------------------------------------------------------------
+# Halo closures
+# ---------------------------------------------------------------------------
+
+
+class TestRowPartitions:
+    def test_own_blocks_tile_the_graph_in_order(self):
+        g = band_graph(300)
+        parts = extract_row_partitions(g, 128, 2)
+        own = np.concatenate([p.nodes[: p.n_own] for p in parts])
+        assert np.array_equal(own, np.arange(300))
+
+    def test_halo_nodes_present_on_band_graph(self):
+        g = band_graph(300)
+        parts = extract_row_partitions(g, 128, 2)
+        assert all(p.n_halo > 0 for p in parts)
+
+    def test_closure_rows_match_whole_graph_rows(self):
+        g = band_graph(200)
+        dense = g.to_dense()
+        for p in extract_row_partitions(g, 64, 1):
+            sub = p.graph.to_dense()
+            lifted = np.zeros((p.n_own, g.n_nodes), dtype=sub.dtype)
+            for li in range(p.n_own):
+                lifted[li, p.nodes] = sub[li]
+            assert np.allclose(lifted, dense[p.nodes[: p.n_own]])
+
+    def test_single_block_is_the_whole_graph(self):
+        g = band_graph(50)
+        (p,) = extract_row_partitions(g, 64, 2)
+        assert p.n_own == 50 and p.n_halo == 0
+
+    def test_bad_args_rejected(self):
+        g = band_graph(10)
+        with pytest.raises(ValueError):
+            extract_row_partitions(g, 0, 1)
+        with pytest.raises(ValueError):
+            extract_row_partitions(g, 4, 0)
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+def capped(bytes_: int):
+    return dataclasses.replace(DEFAULT_ACCEL, gb_capacity_bytes=bytes_)
+
+
+class TestPlanner:
+    def test_fitting_graph_plans_monolithic(self):
+        g = band_graph(64)
+        plan = plan_partition(g, DIMS, capped(1 << 20))
+        assert plan.kind == "monolithic"
+        assert plan.n_partitions == 1
+
+    def test_banded_overflow_plans_row_stream(self):
+        g = band_graph(700)
+        plan = plan_partition(g, DIMS, capped(16 * 1024))
+        assert plan.kind == "row_stream"
+        assert plan.n_partitions > 1
+        assert plan.block_rows > 0 and plan.halo_nodes > 0
+        assert plan.n_hops == len(DIMS)
+
+    def test_plan_keeps_ranked_candidate_evidence(self):
+        g = band_graph(700)
+        plan = plan_partition(g, DIMS, capped(16 * 1024))
+        kinds = {c.kind for c in plan.candidates}
+        assert kinds == set(PARTITION_KINDS)
+        vals = [c.objective_value for c in plan.candidates if c.feasible]
+        assert vals == sorted(vals)
+        assert plan.as_dict()["candidates"][0]["kind"] == plan.kind
+
+    def test_disallowing_monolithic_forces_a_partitioned_kind(self):
+        g = band_graph(700)
+        plan = plan_partition(
+            g, DIMS, capped(16 * 1024), allow_monolithic=False
+        )
+        assert plan.kind != "monolithic"
+
+    def test_multi_device_offers_pp_shard(self):
+        g = dense_block_graph(700)
+        plan = plan_partition(g, DIMS, capped(16 * 1024), n_devices=4)
+        pp = [c for c in plan.candidates if c.kind == "pp_shard"]
+        assert pp and pp[0].feasible and pp[0].n_partitions == 4
+
+    def test_no_feasible_plan_raises(self):
+        g = dense_block_graph(700)
+        with pytest.raises(ValueError, match="no feasible"):
+            plan_partition(
+                g,
+                DIMS,
+                capped(256),  # nothing fits: closures nor column chunks
+                allow_monolithic=False,
+                max_partitions=2,
+            )
+
+    def test_footprint_recorded(self):
+        g = band_graph(700)
+        hw = capped(16 * 1024)
+        plan = plan_partition(g, DIMS, hw)
+        assert plan.footprint_bytes == intermediate_footprint_bytes(
+            700, 16, hw
+        )
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact row streaming
+# ---------------------------------------------------------------------------
+
+
+def whole_graph_reference(g, x, params, kind, policy, order, band_size=128):
+    adj = EllAdjacency.from_csr(g)
+    specs = [ExecSpec(policy, order, band_size, None, 1, False)] * len(params)
+    return np.asarray(
+        forward_layers(kind, params, adj, jnp.asarray(x), specs)
+    )
+
+
+class TestRowStreamBitExact:
+    """v = 200 with block_rows = 96: v_pad % band_size != 0 on both the
+    whole graph and the closures, so padded-tail handling is exercised."""
+
+    V = 200
+    BLOCK = 96
+
+    @pytest.mark.parametrize("kind", ["gcn", "sage", "gin"])
+    def test_kinds_bit_identical(self, kind):
+        g = band_graph(self.V)
+        x = features(g)
+        params = make_params(kind)
+        ref = whole_graph_reference(g, x, params, kind, "sp_opt", "AC")
+        out = row_stream_forward(
+            g, x, params, kind=kind, policy="sp_opt", order="AC",
+            block_rows=self.BLOCK,
+        )
+        assert np.array_equal(out, ref)
+
+    @pytest.mark.parametrize("policy", ["seq", "sp_generic", "sp_opt"])
+    @pytest.mark.parametrize("order", ["AC", "CA"])
+    def test_policies_orders_bit_identical(self, policy, order):
+        g = band_graph(self.V)
+        x = features(g)
+        params = make_params("gcn")
+        ref = whole_graph_reference(g, x, params, "gcn", policy, order)
+        out = row_stream_forward(
+            g, x, params, kind="gcn", policy=policy, order=order,
+            block_rows=self.BLOCK,
+        )
+        assert np.array_equal(out, ref)
+
+    def test_readout_bit_identical(self):
+        g = band_graph(self.V)
+        x = features(g)
+        params = make_params("gcn")
+        from repro.gnn.layers import segment_readout
+
+        ref = whole_graph_reference(g, x, params, "gcn", "sp_opt", "AC")
+        ref_read = np.asarray(
+            segment_readout(
+                jnp.asarray(ref),
+                jnp.zeros(ref.shape[0], dtype=jnp.int32),
+                1,
+                reduce="mean",
+            )
+        )[0]
+        out = row_stream_forward(
+            g, x, params, kind="gcn", policy="sp_opt", order="AC",
+            block_rows=self.BLOCK, readout="mean",
+        )
+        assert np.array_equal(out, ref_read)
+
+
+class TestFeatureChunk:
+    def test_chunked_columns_match_to_float_tolerance(self):
+        g = band_graph(120)
+        x = features(g)
+        params = make_params("gcn")
+        ref = whole_graph_reference(g, x, params, "gcn", "seq", "AC")
+        for order in ("AC", "CA"):
+            out = feature_chunk_forward(
+                g, x, params, kind="gcn", order=order, chunk_f=5
+            )
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+class TestStreamedSpmm:
+    def test_streamed_matches_monolithic_bitwise(self):
+        from repro.kernels.spmm.ops import spmm, spmm_streamed
+
+        g = band_graph(300)
+        adj = EllAdjacency.from_csr(g)
+        x = jnp.asarray(features(g, f_in=24))
+        full = np.asarray(spmm(adj.indices, adj.weights, x))
+        streamed = np.asarray(
+            spmm_streamed(adj.indices, adj.weights, x, block_rows=128)
+        )
+        assert np.array_equal(streamed, full)
+
+    def test_small_input_short_circuits(self):
+        from repro.kernels.spmm.ops import spmm, spmm_streamed
+
+        g = band_graph(64)
+        adj = EllAdjacency.from_csr(g)
+        x = jnp.asarray(features(g, f_in=8))
+        assert np.array_equal(
+            np.asarray(spmm_streamed(adj.indices, adj.weights, x,
+                                     block_rows=4096)),
+            np.asarray(spmm(adj.indices, adj.weights, x)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Admission: footprint-aware oversized_reason
+# ---------------------------------------------------------------------------
+
+
+class TestOversizedReason:
+    def test_node_cap_still_first(self):
+        pol = BucketPolicy(max_nodes=64)
+        g = band_graph(100)
+        assert "max_nodes" in pol.oversized_reason(g)
+
+    def test_footprint_check_fires_under_capacity(self):
+        pol = BucketPolicy(max_nodes=4096)
+        g = band_graph(1500)
+        hw = capped(64 * 1024)
+        reason = pol.oversized_reason(g, f=16, hw=hw)
+        assert reason is not None and "gb_capacity_bytes" in reason
+
+    def test_no_capacity_no_footprint_rejection(self):
+        pol = BucketPolicy(max_nodes=4096)
+        g = band_graph(1500)
+        assert pol.oversized_reason(g, f=16, hw=DEFAULT_ACCEL) is None
+
+
+# ---------------------------------------------------------------------------
+# Serving integration
+# ---------------------------------------------------------------------------
+
+
+SCHEDULE = ModelSchedule.from_policies("sp_opt", "AC", DIMS)
+
+
+def engine_params(g):
+    wls = [GNNLayerWorkload(g.nnz, fi, fo) for fi, fo in DIMS]
+    prog = repro.compile(wls, graph=g, schedule=SCHEDULE)
+    return prog.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def giantish():
+    g = band_graph(1500)
+    return g, features(g), engine_params(g)
+
+
+class TestEnginePartitionedLane:
+    HW = capped(64 * 1024)
+    POL = BucketPolicy(max_nodes=1024)
+
+    def partitioned_engine(self, params, **kw):
+        return InferenceEngine(
+            DIMS,
+            params,
+            policy=self.POL,
+            hw=self.HW,
+            schedule=SCHEDULE,
+            objective="edp",
+            partition_oversized=True,
+            store=None,
+            **kw,
+        )
+
+    def test_oversized_without_flag_rejects(self, giantish):
+        g, x, params = giantish
+        eng = InferenceEngine(
+            DIMS, params, policy=self.POL, hw=self.HW, schedule=SCHEDULE,
+            store=None,
+        )
+        (res,) = eng.submit([Request(graph=g, x=x, rid=0)])
+        assert res.status == "rejected"
+        assert res.error_type == "oversized_graph"
+
+    def test_partitioned_bit_identical_to_monolithic(self, giantish):
+        g, x, params = giantish
+        eng = self.partitioned_engine(params)
+        (res,) = eng.submit([Request(graph=g, x=x, rid=0)])
+        assert res.status == "ok", res.error
+        assert res.plan == "row_stream"
+        assert res.n_partitions > 1
+        assert res.partition_wall_s > 0
+
+        ref_eng = InferenceEngine(
+            DIMS, params, policy=BucketPolicy(max_nodes=2048),
+            schedule=SCHEDULE, store=None,
+        )
+        (ref,) = ref_eng.submit([Request(graph=g, x=x, rid=0)])
+        assert ref.status == "ok", ref.error
+        assert np.array_equal(
+            np.asarray(res.output), np.asarray(ref.output)
+        )
+
+        st = eng.stats()
+        assert st.n_partitioned == 1
+        assert st.partition_plans == {"row_stream": 1}
+        assert st.partition_wall_s > 0
+
+    def test_mixed_batch_serves_both_lanes(self, giantish):
+        g, x, params = giantish
+        small = band_graph(100)
+        xs = features(small)
+        eng = self.partitioned_engine(params)
+        results = eng.submit([
+            Request(graph=small, x=xs, rid=0),
+            Request(graph=g, x=x, rid=1),
+        ])
+        assert [r.status for r in results] == ["ok", "ok"]
+        assert results[0].n_partitions == 0
+        assert results[1].n_partitions > 1
+
+    def test_plan_cached_across_requests(self, giantish):
+        g, x, params = giantish
+        eng = self.partitioned_engine(params)
+        eng.submit([Request(graph=g, x=x, rid=0)])
+        searches = eng.stats().n_searches
+        eng.submit([Request(graph=g, x=x, rid=1)])
+        assert eng.stats().n_searches == searches
+        assert eng.stats().n_partitioned == 2
+
+
+class TestAsyncPartitionedLane:
+    def test_async_oversized_routes_to_partitioned_lane(self, giantish):
+        g, x, params = giantish
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ae = AsyncEngine(
+                DIMS,
+                params,
+                window_ms=5,
+                policy=BucketPolicy(max_nodes=1024),
+                hw=capped(64 * 1024),
+                schedule=SCHEDULE,
+                objective="edp",
+                partition_oversized=True,
+                store=None,
+            )
+            ae.start()
+            try:
+                fut = ae.submit_async(ae.make_request(g, x))
+                res = fut.result(timeout=300)
+            finally:
+                ae.close()
+        assert res.status == "ok", res.error
+        assert res.plan == "row_stream"
+        assert res.n_partitions > 1
+        st = ae.stats()
+        assert st.n_ok == 1
+        label = next(iter(st.per_device))
+        assert st.per_device[label]["n_partitioned"] == 1
+
+    def test_async_without_flag_still_rejects(self, giantish):
+        g, x, params = giantish
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ae = AsyncEngine(
+                DIMS,
+                params,
+                window_ms=5,
+                policy=BucketPolicy(max_nodes=1024),
+                hw=capped(64 * 1024),
+                schedule=SCHEDULE,
+                store=None,
+            )
+            ae.start()
+            try:
+                res = ae.submit_async(ae.make_request(g, x)).result(timeout=60)
+            finally:
+                ae.close()
+        assert res.status == "rejected"
+        assert res.error_type == "oversized_graph"
