@@ -11,6 +11,7 @@ import sys
 import time
 
 from . import (
+    calibrate_model,
     fig9_runtime,
     fig10_energy,
     fig11_gb_breakdown,
@@ -37,6 +38,7 @@ MODULES = {
     "serve_restart": serve_gnn,
     "serve_async": serve_gnn,
     "serve_giant": serve_gnn,
+    "calibrate": calibrate_model,
     "table3": table3_validation,
     "roofline": roofline,
 }
@@ -73,6 +75,8 @@ def main() -> int:
             rows = serve_gnn.run_async(smoke=args.fast)
         elif n == "serve_giant":
             rows = serve_gnn.run_giant(smoke=args.fast)
+        elif n == "calibrate":
+            rows = calibrate_model.run(fast=args.fast)
         elif n in ("fig12", "fig13") and args.fast:
             # skip the slow scalar-loop baseline (and its speedup guard)
             rows = mod.run(with_baseline=False)

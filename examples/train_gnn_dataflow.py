@@ -3,9 +3,12 @@
 `repro.compile()` runs the model-level mapper (one dataflow *per layer*
 via dynamic programming over inter-layer transition costs — paper
 Sec. 4.4), lowers the winning `ModelSchedule` to executable knobs, and
-returns a frozen `Program` already bound to the graph; `program.loss` then
-drives the actual JAX training of a 2-layer GCN on a node-classification
-task.
+returns a frozen `Program` already bound to the graph; `program.train_step`
+then drives the actual JAX training of a 2-layer GCN on a
+node-classification task through the Program's shared executable cache:
+the fused loss/grad/update step is traced **once** on the first step and
+every later step — every later *epoch* — reuses the jitted executable
+(the second epoch asserts a `repro.trace_count()` delta of exactly 0).
 
     PYTHONPATH=src python examples/train_gnn_dataflow.py [--dataset cora]
 """
@@ -22,9 +25,11 @@ from repro.graphs import load_dataset
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="cora")
-    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=20, help="steps per epoch")
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
     args = ap.parse_args()
 
     g, spec = load_dataset(args.dataset)
@@ -46,23 +51,29 @@ def main():
           f"({homo.layers[0].dataflow.to_string()})")
     print(f"  exec policies: {[s.policy for s in program.specs]}")
 
-    # 2. train a 2-layer GCN through the compiled program
+    # 2. train a 2-layer GCN through the compiled program's own fused
+    #    step — the jitted executable lives in the Program's exec cache
     x, labels, mask = make_node_classification_task(
         g, spec.n_features, args.classes
     )
     params = program.init(jax.random.PRNGKey(0))
 
-    @jax.jit
-    def step(p):
-        l, grads = jax.value_and_grad(
-            lambda q: program.loss(q, x, labels, mask)
-        )(p)
-        return l, jax.tree_util.tree_map(lambda a, b: a - 0.05 * b, p, grads)
-
-    for i in range(args.steps):
-        loss, params = step(params)
-        if i % 10 == 0 or i == args.steps - 1:
-            print(f"  step {i:3d} loss {float(loss):.4f}")
+    for epoch in range(args.epochs):
+        traces_before = repro.trace_count()
+        for i in range(args.steps):
+            loss, params = program.train_step(
+                params, x, labels, mask, lr=args.lr
+            )
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"  epoch {epoch} step {i:3d} loss {float(loss):.4f}")
+        delta = repro.trace_count() - traces_before
+        print(f"  epoch {epoch}: {delta} new XLA traces")
+        if epoch > 0:
+            # the executable cache must make warm epochs trace-free
+            assert delta == 0, (
+                f"epoch {epoch} took {delta} new traces; the train-step "
+                f"executable should have been cached after epoch 0"
+            )
 
 
 if __name__ == "__main__":

@@ -7,5 +7,12 @@ frozen :class:`repro.api.Program` with ``run``/``loss``/``stats`` and a
 cacheable ``save``/``load`` JSON artifact.
 """
 from .api import Program, compile, trace_count, workload_fingerprint
+from .core.hw import LatencyModel
 
-__all__ = ["Program", "compile", "trace_count", "workload_fingerprint"]
+__all__ = [
+    "LatencyModel",
+    "Program",
+    "compile",
+    "trace_count",
+    "workload_fingerprint",
+]

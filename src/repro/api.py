@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .core.cost_model import GNNLayerWorkload
-from .core.hw import AcceleratorConfig, DEFAULT_ACCEL, HWGrid
+from .core.hw import AcceleratorConfig, DEFAULT_ACCEL, HWGrid, LatencyModel
 from .core.mapper import TABLE5_NAMES, search_model, search_model_codesign
 from .core.registry import get_objective
 from .core.schedule import ModelSchedule, TransitionSpec
@@ -358,6 +358,52 @@ class Program:
         """Masked softmax cross-entropy over :meth:`run`'s logits."""
         return masked_xent_loss(self.run(params, x, mesh=mesh), labels, mask)
 
+    @property
+    def schedule_digest(self) -> str:
+        """Stable identity of the compiled schedule content (see
+        :meth:`ModelSchedule.digest`) — the key under which the serving
+        engine attributes measured wall-clock observations."""
+        return self.schedule.digest()
+
+    def _train_executable(self, n_nodes: int, mesh, lr: float):
+        """Shape-keyed jitted SGD step, cached alongside the forward
+        executables (same sharing semantics as :meth:`_executable`)."""
+        key = ("train", n_nodes, mesh, lr)
+        exe = self._exec_cache.get(key)
+        if exe is None:
+            kind, specs = self.kind, self.specs
+
+            def step(params, indices, weights, x, labels, mask):
+                _note_trace()
+                adj = EllAdjacency(indices, weights, n_nodes)
+
+                def loss_fn(p):
+                    h = forward_layers(kind, p, adj, x, specs, mesh=mesh)
+                    return masked_xent_loss(h, labels, mask)
+
+                l, grads = jax.value_and_grad(loss_fn)(params)
+                new = jax.tree_util.tree_map(
+                    lambda a, g: a - lr * g, params, grads
+                )
+                return l, new
+
+            exe = jax.jit(step)
+            self._exec_cache[key] = exe
+        return exe
+
+    def train_step(self, params, x, labels, mask, *, lr: float = 0.05, mesh=None):
+        """One fused SGD step (loss, grad, parameter update) under the
+        compiled schedule; returns ``(loss, new_params)``.
+
+        The step executable lives in the Program's shared cache keyed by
+        ``(shape, lr, mesh)``: later epochs — and same-shape rebinds — take
+        zero new XLA traces (``examples/train_gnn_dataflow.py`` asserts
+        exactly that via :func:`trace_count`).
+        """
+        adj = self._require_adj()
+        exe = self._train_executable(adj.n_nodes, mesh, float(lr))
+        return exe(params, adj.indices, adj.weights, x, labels, mask)
+
     # -- artifact -----------------------------------------------------------
     def to_json(self) -> str:
         """Canonical (sorted-keys, 2-space indent) JSON artifact; stable
@@ -385,7 +431,7 @@ class Program:
         stats = None if d["stats"] is None else _stats_from_dict(d["stats"])
         return cls(
             schedule=ModelSchedule.from_json(json.dumps(d["schedule"])),
-            hw=AcceleratorConfig(**d["hw"]),
+            hw=AcceleratorConfig.from_dict(d["hw"]),
             kind=d["kind"],
             objective=d["objective"],
             use_pallas=d["use_pallas"],
@@ -542,6 +588,7 @@ def compile(
     pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
     top_k: int = 4,
     hw_selection: str = "objective",
+    latency_model: LatencyModel | None = None,
 ) -> Program:
     """Search -> lower -> package: the one entry point over the mapper.
 
@@ -565,8 +612,22 @@ def compile(
 
     Returns a frozen :class:`Program`; with ``graph`` given, the program is
     already bound and ``program.run(params, x)`` executes immediately.
+
+    ``latency_model`` installs a fitted :class:`LatencyModel` (see
+    :mod:`repro.core.calibrate`) into the pricing config before any search
+    or re-pricing runs, so candidate ranking uses calibrated cycles.  When
+    omitted, the ``REPRO_LATENCY_MODEL`` environment variable may point at
+    a fitted artifact; otherwise the identity (paper-constant) model is
+    used.
     """
     get_objective(objective)
+    if latency_model is None:
+        latency_model = LatencyModel.from_env()
+    if latency_model is not None:
+        if isinstance(hw, HWGrid):
+            hw = replace(hw, base=replace(hw.base, latency=latency_model))
+        else:
+            hw = replace(hw, latency=latency_model)
     if hw_selection not in ("objective", "objective_x_cost"):
         # fail before any (expensive) search runs
         raise ValueError(

@@ -4,14 +4,158 @@ Also carries the TPU-v5e constants used by the roofline analysis in
 :mod:`repro.launch.roofline` so every hardware number lives in one place,
 plus :class:`HWGrid` — the broadcastable hardware axis the co-design search
 (:func:`repro.core.mapper.search_codesign`) and the batched simulator
-(:func:`repro.core.simulator.simulate_batch`) sweep.
+(:func:`repro.core.simulator.simulate_batch`) sweep — and
+:class:`LatencyModel`, the fittable latency constants the calibration
+harness (:mod:`repro.core.calibrate`) anchors to measured wall-clock.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
+import json
+import os
+from dataclasses import asdict, dataclass, field, replace
+from pathlib import Path
 
 import numpy as np
+
+#: LatencyModel artifact schema version (same bump discipline as
+#: ``repro.api.PROGRAM_FORMAT``).
+LATENCY_FORMAT = "repro.latency/v1"
+
+#: environment override: path to a fitted :class:`LatencyModel` JSON file
+#: that ``repro.compile`` and the serving engine load when no explicit
+#: model is passed.
+LATENCY_MODEL_ENV = "REPRO_LATENCY_MODEL"
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """Fittable latency constants over the analytic cycle model.
+
+    The simulator's closed forms predict *relative* cost from first
+    principles; this parameter set anchors them to a measured backend the
+    way the empirical GEMM performance models do (per-direction effective
+    bandwidth, a compute ``overhead_factor``, a per-transfer ``C_setup``):
+
+    ``cycles_calibrated = overhead(family) * cycles_analytic(bw_eff,
+    dram_bw) + c_setup``, and ``wall_s = cycle_time_s * cycles_calibrated``.
+
+    The default instance is the **identity**: every multiplier is 1.0 and
+    every additive term 0.0, so an uncalibrated
+    :class:`AcceleratorConfig` reproduces the paper-constant simulator
+    outputs bit-for-bit (pinned by ``tests/test_calibrate.py``).  A fitted
+    instance (see :func:`repro.core.calibrate.fit_latency_model`) records
+    the backend fingerprint it was measured on plus its residual error.
+    """
+
+    #: per-policy-family compute-overhead multipliers on the analytic
+    #: cycle count (the GEMM model's ``overhead_factor``, one per
+    #: executable kernel family).
+    overhead_seq: float = 1.0
+    overhead_sp_generic: float = 1.0
+    overhead_sp_opt: float = 1.0
+    overhead_pp: float = 1.0
+    #: measured effective GB<->PE bandwidth in elements/cycle (the GEMM
+    #: model's ``BW``).  ``None`` = the nominal ``gb_bandwidth``.  On an
+    #: :class:`HWGrid` sweep the ratio ``bw_eff / base.gb_bandwidth``
+    #: derates every grid point's bandwidth column.
+    bw_eff: float | None = None
+    #: per-kernel-dispatch setup overhead in cycles (the GEMM model's
+    #: ``C_setup``), charged once per simulated layer.
+    c_setup: float = 0.0
+    #: DRAM spill bandwidth in elements/cycle: when the staged
+    #: intermediate exceeds ``gb_capacity_bytes`` the serialized hand-off
+    #: moves at this rate instead of the GB bandwidth.  ``None`` keeps the
+    #: pre-calibration behavior (spills change energy only).
+    dram_bw: float | None = None
+    #: seconds per calibrated cycle.  0.0 = uncalibrated: the model ranks
+    #: but cannot predict wall-clock.
+    cycle_time_s: float = 0.0
+    #: backend fingerprint the fit was measured on ("" = uncalibrated).
+    backend: str = ""
+    #: median relative wall-clock error of the fit over its grid.
+    fit_error_median: float = 0.0
+
+    OVERHEAD_FAMILIES = ("seq", "sp_generic", "sp_opt", "pp")
+
+    @property
+    def calibrated(self) -> bool:
+        return self.cycle_time_s > 0.0
+
+    def overhead(self, family: str) -> float:
+        """Compute-overhead multiplier for one kernel policy family
+        (``seq`` / ``sp_generic`` / ``sp_opt`` / ``pp``)."""
+        try:
+            return float(getattr(self, f"overhead_{family}"))
+        except AttributeError:
+            raise ValueError(
+                f"unknown policy family {family!r}; expected one of "
+                f"{self.OVERHEAD_FAMILIES}"
+            ) from None
+
+    def effective_bw(self, gb_bandwidth: float) -> float:
+        """The GB bandwidth the latency terms should use."""
+        return float(gb_bandwidth) if self.bw_eff is None else float(self.bw_eff)
+
+    def calibrate_cycles(self, cycles, family: str):
+        """Analytic -> calibrated cycles (scalar or array; identity by
+        default)."""
+        return cycles * self.overhead(family) + self.c_setup
+
+    def wall_s(self, cycles) -> float:
+        """Predicted wall seconds for already-calibrated cycles."""
+        if not self.calibrated:
+            raise ValueError(
+                "LatencyModel is uncalibrated (cycle_time_s == 0); run "
+                "repro.core.calibrate.calibrate() or load a fitted model"
+            )
+        return float(cycles) * self.cycle_time_s
+
+    # -- artifact -------------------------------------------------------------
+    def to_json(self) -> str:
+        """Canonical (sorted-keys) JSON; byte-stable across round-trips."""
+        payload = {"format": LATENCY_FORMAT, **asdict(self)}
+        return json.dumps(payload, indent=2, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "LatencyModel":
+        d = json.loads(text)
+        if d.get("format") != LATENCY_FORMAT:
+            raise ValueError(
+                f"not a {LATENCY_FORMAT} artifact (format={d.get('format')!r})"
+            )
+        d.pop("format")
+        return cls(**d)
+
+    def save(self, path) -> Path:
+        """Atomic write (temp file + ``os.replace``), same contract as
+        ``Program.save``."""
+        p = Path(path)
+        tmp = p.with_name(p.name + f".tmp.{os.getpid()}")
+        try:
+            tmp.write_text(self.to_json())
+            os.replace(tmp, p)
+        finally:
+            tmp.unlink(missing_ok=True)
+        return p
+
+    @classmethod
+    def load(cls, path) -> "LatencyModel":
+        return cls.from_json(Path(path).read_text())
+
+    @classmethod
+    def from_env(cls) -> "LatencyModel | None":
+        """The model pointed at by ``REPRO_LATENCY_MODEL``, or ``None``
+        when the variable is unset (a set-but-unreadable path raises —
+        a misconfigured deployment should fail loudly, not silently
+        serve uncalibrated)."""
+        path = os.environ.get(LATENCY_MODEL_ENV)
+        if not path:
+            return None
+        return cls.load(path)
+
+
+DEFAULT_LATENCY = LatencyModel()
 
 
 @dataclass(frozen=True)
@@ -38,6 +182,24 @@ class AcceleratorConfig:
     # cost less per access — we make that concrete and document it).
     buffer_energy_exponent: float = 0.5
     dram_energy_pj: float = 100.0  # only used when gb_capacity is exceeded
+    #: fittable latency constants (identity by default — see LatencyModel)
+    latency: LatencyModel = DEFAULT_LATENCY
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AcceleratorConfig":
+        """Rebuild from an ``asdict()`` payload.
+
+        Tolerates artifacts written before the ``latency`` field existed
+        (pre-calibration Programs/schedules keep loading) and converts a
+        nested latency mapping back into a :class:`LatencyModel`.
+        """
+        d = dict(d)
+        lat = d.pop("latency", None)
+        if lat is None:
+            lat = DEFAULT_LATENCY
+        elif not isinstance(lat, LatencyModel):
+            lat = LatencyModel(**lat)
+        return cls(latency=lat, **d)
 
     def buffer_access_energy(self, capacity_bytes):
         """Energy per access for a buffer of the given capacity (pJ).

@@ -748,6 +748,93 @@ def search_model(
     )
 
 
+def search_model_topk(
+    workloads: list[GNNLayerWorkload],
+    hw: AcceleratorConfig = DEFAULT_ACCEL,
+    objective: str = "cycles",
+    names: tuple[str, ...] = TABLE5_NAMES,
+    pe_splits: tuple[float, ...] = (0.25, 0.5, 0.75),
+    top_k: int = 4,
+    tile_stats_caches: dict[int, TileStats] | None = None,
+) -> list[ModelSchedule]:
+    """Ranked candidate schedules for measured re-ranking.
+
+    The analytic winner alone is what :func:`search_model` returns; the
+    serving engine's execution-feedback loop (Bao-style) instead wants the
+    model's *top-k* so it can time each candidate on the real backend and
+    keep the measured best.  Returns up to ``top_k`` schedules, analytic
+    best first: the DP winner, the homogeneous shared baseline, and the
+    best homogeneous schedule per distinct *executable policy family*
+    (``seq`` / ``sp_generic`` / ``sp_opt`` / ``pp``) from the per-layer
+    candidate pool — family diversity is what gives measurement something
+    meaningful to choose between, since same-family tilings lower to the
+    same kernels.  Deduplicated by :meth:`ModelSchedule.digest`; every
+    candidate carries its own priced stats on ``hw``.
+    """
+    caches = tile_stats_caches if tile_stats_caches is not None else {}
+    winner = search_model(
+        workloads,
+        hw,
+        objective=objective,
+        names=names,
+        pe_splits=pe_splits,
+        top_k=top_k,
+        tile_stats_caches=caches,
+    )
+    candidates: list[ModelSchedule] = [winner]
+    if winner.shared_baseline is not None:
+        candidates.append(winner.shared_baseline)
+
+    # homogeneous candidates from the same per-layer pool the DP saw
+    ts_for = _tile_stats_cache(caches)
+    pool: list[GNNDataflow] = []
+    for wl in workloads:
+        for r in search_dataflows(
+            wl,
+            hw,
+            objective=objective,
+            names=names,
+            pe_splits=pe_splits,
+            top_k=top_k,
+            tile_stats=ts_for(wl),
+        ):
+            if r.dataflow not in pool:
+                pool.append(r.dataflow)
+    by_family: dict[str, ModelSchedule] = {}
+    for df in pool:
+        try:
+            stats = simulate_model([df], list(workloads), hw)
+        except ValueError:  # illegal on some layer of this model
+            continue
+        sched = ModelSchedule(
+            tuple(
+                LayerSchedule(df, wl.f_in, wl.g_out, name=wl.name, stats=st)
+                for wl, st in zip(workloads, stats.layers)
+            ),
+            tuple(t.spec for t in stats.transitions),
+            objective=objective,
+            stats=stats,
+            hw=hw,
+        )
+        fam = sched.layers[0].lower().policy
+        cur = by_family.get(fam)
+        if cur is None or stats.objective(objective) < cur.stats.objective(
+            objective
+        ):
+            by_family[fam] = sched
+    candidates.extend(by_family.values())
+
+    seen: set[str] = set()
+    unique: list[ModelSchedule] = []
+    for s in candidates:
+        dig = s.digest()
+        if dig not in seen:
+            seen.add(dig)
+            unique.append(s)
+    unique.sort(key=lambda s: s.stats.objective(objective))
+    return unique[: max(1, int(top_k))]
+
+
 # ---------------------------------------------------------------------------
 # Hardware co-design: dataflow x hardware grid search + value of flexibility
 # ---------------------------------------------------------------------------

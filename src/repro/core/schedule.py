@@ -24,6 +24,7 @@ The costed counterpart lives in :mod:`repro.core.simulator`
 from __future__ import annotations
 
 import json
+import zlib
 from dataclasses import asdict, dataclass, field
 from typing import TYPE_CHECKING, Sequence
 
@@ -320,6 +321,20 @@ class ModelSchedule:
         df = default_dataflow(policy, order=order, band_size=band_size)
         return cls.from_dataflows([df] * len(dims), dims, v=v)
 
+    def digest(self) -> str:
+        """Stable 8-hex identity of the schedule *content* (layers +
+        transitions + objective, hw excluded so repricing on a different
+        or recalibrated config does not change identity).  This is the
+        key the serving engine's measured-latency ledger and re-ranker
+        use to attribute wall-clock observations to a schedule."""
+        payload = {
+            "objective": self.objective,
+            "layers": [l.to_dict() for l in self.layers],
+            "transitions": [t.to_dict() for t in self.transitions],
+        }
+        data = json.dumps(payload, sort_keys=True).encode()
+        return f"{zlib.crc32(data) & 0xFFFFFFFF:08x}"
+
     # -- (de)serialization ---------------------------------------------------
     def to_json(self, indent: int | None = 2) -> str:
         payload = {
@@ -338,7 +353,7 @@ class ModelSchedule:
             tuple(LayerSchedule.from_dict(l) for l in d["layers"]),
             tuple(TransitionSpec.from_dict(t) for t in d.get("transitions", [])),
             objective=d.get("objective", "cycles"),
-            hw=AcceleratorConfig(**d["hw"]) if "hw" in d else None,
+            hw=AcceleratorConfig.from_dict(d["hw"]) if "hw" in d else None,
         )
 
     def __str__(self) -> str:

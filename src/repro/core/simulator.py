@@ -226,11 +226,12 @@ def simulate(
     # strategies keep just the chunk in flight (Table 3's buffering) — every
     # non-fused path spills to DRAM pricing when its own footprint exceeds
     # the GB capacity.
-    if (
+    spilled = (
         not sp_opt
         and hw.gb_capacity_bytes is not None
         and buffering * bytes_per > hw.gb_capacity_bytes
-    ):
+    )
+    if spilled:
         int_energy_per_access = hw.dram_energy_pj
 
     # ---- runtime -----------------------------------------------------------
@@ -242,7 +243,8 @@ def simulate(
             tot += v_
         return tot
 
-    bw = float(hw.gb_bandwidth)
+    lm = hw.latency
+    bw = lm.effective_bw(hw.gb_bandwidth)
     # operand traffic (excluding the intermediate) overlaps with compute and
     # shows up as a bandwidth stall; the intermediate hand-off is serialized
     # at the phase boundary for Seq/SP-Generic — this is exactly Table 3's
@@ -255,7 +257,11 @@ def simulate(
     stall_2 = max(1.0, traf_2 / max(bw * second_c.cycles, 1e-9))
 
     if df.inter == InterPhase.SEQ or (df.inter == InterPhase.SP and not sp_opt):
-        t_xfer = (int_wr + int_rd) / bw
+        # a spilled intermediate hands off through DRAM: when the fitted
+        # model carries a measured spill bandwidth, the serialized
+        # transfer moves at that rate instead of the GB rate.
+        bw_int = lm.dram_bw if (spilled and lm.dram_bw is not None) else bw
+        t_xfer = (int_wr + int_rd) / bw_int
         cycles = stall_1 * first_c.cycles + stall_2 * second_c.cycles + t_xfer
         stall = cycles / max(first_c.cycles + second_c.cycles, 1e-9)
     elif sp_opt:
@@ -279,6 +285,18 @@ def simulate(
         d2 = traf_2 / max(float(b_ck.sum()), 1e-9)
         stall = max(1.0, (d1 + d2) / bw)
         cycles = nostall * stall
+
+    # calibrated-model correction: per-family overhead multiplier plus
+    # per-dispatch setup, mirroring the empirical GEMM model's
+    # `overhead_factor` / `C_setup`.  Identity at the uncalibrated default
+    # (`x * 1.0 + 0.0` is bit-exact), pinned by tests/test_calibrate.py.
+    if df.inter == InterPhase.SEQ:
+        family = "seq"
+    elif df.inter == InterPhase.PP:
+        family = "pp"
+    else:
+        family = "sp_opt" if sp_opt else "sp_generic"
+    cycles = lm.calibrate_cycles(cycles, family)
 
     # ---- energy ------------------------------------------------------------
     breakdown: dict[str, float] = {}
@@ -525,10 +543,15 @@ def _eval_candidates(
         n_pes = np.asarray(cand["n_pes"], dtype=np.int64)
     else:
         n_pes = hw.n_pes
+    lm = hw.latency
     if "gb_bw" in cand:
         bw = np.asarray(cand["gb_bw"], dtype=np.float64)
+        if lm.bw_eff is not None:
+            # hardware-grid sweep: derate every point's nominal bandwidth
+            # by the measured/nominal ratio of the base config
+            bw = bw * (float(lm.bw_eff) / float(hw.gb_bandwidth))
     else:
-        bw = float(hw.gb_bandwidth)
+        bw = lm.effective_bw(hw.gb_bandwidth)
     if "gb_cap" in cand:
         gb_cap = np.asarray(cand["gb_cap"], dtype=np.float64)
     else:
@@ -662,7 +685,8 @@ def _eval_candidates(
         buffering = np.where(sp_opt, 0.0, pel)
         int_e = np.where(sp_opt, 0.0, hw.gb_energy_pj)
     # capacity spill: each strategy's own live footprint (mirrors `simulate`)
-    int_e = np.where(buffering * bytes_per > gb_cap, hw.dram_energy_pj, int_e)
+    spilled = buffering * bytes_per > gb_cap
+    int_e = np.where(spilled, hw.dram_energy_pj, int_e)
 
     # ---- runtime ---------------------------------------------------------
     stall_1 = np.maximum(1.0, first_nonint / np.maximum(bw * first_cycles, 1e-9))
@@ -670,7 +694,10 @@ def _eval_candidates(
 
     if spec.inter in (InterPhase.SEQ, InterPhase.SP):
         base = stall_1 * first_cycles + stall_2 * second_cycles
-        t_xfer = (int_wr + int_rd) / bw
+        # spilled intermediates hand off at the measured DRAM rate when the
+        # fitted model carries one (mirrors `simulate`)
+        bw_int = np.where(spilled, float(lm.dram_bw), bw) if lm.dram_bw is not None else bw
+        t_xfer = (int_wr + int_rd) / bw_int
         if spec.inter == InterPhase.SEQ:
             cycles = base + t_xfer
         else:
@@ -682,6 +709,15 @@ def _eval_candidates(
         d1 = first_nonint / np.maximum(sum_a, 1e-9)
         d2 = second_nonint / np.maximum(sum_b, 1e-9)
         cycles = nostall * np.maximum(1.0, (d1 + d2) / bw)
+
+    # calibrated-model correction, term-for-term with `simulate`
+    if spec.inter == InterPhase.SEQ:
+        ov = lm.overhead_seq
+    elif spec.inter == InterPhase.PP:
+        ov = lm.overhead_pp
+    else:
+        ov = np.where(sp_opt, lm.overhead_sp_opt, lm.overhead_sp_generic)
+    cycles = cycles * ov + lm.c_setup
 
     # ---- energy ----------------------------------------------------------
     int_traffic = np.where(sp_opt, 0.0, int_wr + int_rd)
@@ -845,16 +881,21 @@ def transition_cost(
         return TransitionStats(spec, 0.0, 0.0, 0.0)
     elems = float(spec.elements)
     accesses = 2.0 * elems
+    lm = hw.latency
+    bw = lm.effective_bw(hw.gb_bandwidth)
     e_per = hw.gb_energy_pj
-    if (
+    spilled = (
         hw.gb_capacity_bytes is not None
         and elems * hw.bytes_per_elem > hw.gb_capacity_bytes
-    ):
+    )
+    if spilled:
         e_per = hw.dram_energy_pj
+        if lm.dram_bw is not None:
+            bw = lm.dram_bw
     return TransitionStats(
         spec,
         gb_accesses=accesses,
-        cycles=accesses / float(hw.gb_bandwidth),
+        cycles=accesses / bw,
         energy_pj=accesses * e_per,
     )
 
@@ -948,15 +989,17 @@ def partition_comm_cost(
     else:  # pp_shard
         elems = float(v) * float(f)
         gb_acc, dram_acc = 2.0 * elems, 0.0
-    accesses = gb_acc + dram_acc
     energy = gb_acc * hw.gb_energy_pj + dram_acc * hw.dram_energy_pj
+    lm = hw.latency
+    bw = lm.effective_bw(hw.gb_bandwidth)
+    dram_bw = bw if lm.dram_bw is None else float(lm.dram_bw)
     return PartitionCommStats(
         kind,
         n_partitions,
         elems=elems,
         gb_accesses=gb_acc,
         dram_accesses=dram_acc,
-        cycles=accesses / float(hw.gb_bandwidth),
+        cycles=gb_acc / bw + dram_acc / dram_bw,
         energy_pj=energy,
     )
 

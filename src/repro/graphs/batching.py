@@ -266,6 +266,14 @@ class TrafficProfile:
 
     requests: dict[tuple[int, int], int] = field(default_factory=dict)
     batches: dict[tuple[int, int, int], int] = field(default_factory=dict)
+    #: measured batch wall-clock per schedule:
+    #: ``(v_bucket, d_bucket, slots, schedule_digest) -> (count,
+    #: total_wall_s)`` — the execution-feedback ledger the engine's
+    #: measured re-ranking (:meth:`InferenceEngine.rerank_topk`) scores
+    #: candidate schedules with.
+    observed: dict[tuple[int, int, int, str], tuple[int, float]] = field(
+        default_factory=dict
+    )
 
     def record_request(self, bucket: tuple[int, int], n: int = 1) -> None:
         key = (int(bucket[0]), int(bucket[1]))
@@ -275,17 +283,45 @@ class TrafficProfile:
         key = (int(bucket[0]), int(bucket[1]), int(slots))
         self.batches[key] = self.batches.get(key, 0) + 1
 
+    def record_wall(
+        self,
+        bucket: tuple[int, int],
+        slots: int,
+        schedule_digest: str,
+        wall_s: float,
+    ) -> None:
+        """Fold one measured batch wall time into the observation ledger."""
+        key = (int(bucket[0]), int(bucket[1]), int(slots), str(schedule_digest))
+        n, tot = self.observed.get(key, (0, 0.0))
+        self.observed[key] = (n + 1, tot + float(wall_s))
+
+    def mean_wall(
+        self, bucket: tuple[int, int], slots: int, schedule_digest: str
+    ) -> float | None:
+        """Mean observed wall seconds for a (shape, schedule), or ``None``
+        when never observed."""
+        key = (int(bucket[0]), int(bucket[1]), int(slots), str(schedule_digest))
+        entry = self.observed.get(key)
+        if entry is None or entry[0] == 0:
+            return None
+        return entry[1] / entry[0]
+
     @property
     def n_requests(self) -> int:
         return sum(self.requests.values())
 
     def merge(self, other: "TrafficProfile") -> "TrafficProfile":
-        """A new profile with both ledgers summed (self is unchanged)."""
-        out = TrafficProfile(dict(self.requests), dict(self.batches))
+        """A new profile with all ledgers summed (self is unchanged)."""
+        out = TrafficProfile(
+            dict(self.requests), dict(self.batches), dict(self.observed)
+        )
         for k, n in other.requests.items():
             out.requests[k] = out.requests.get(k, 0) + n
         for k, n in other.batches.items():
             out.batches[k] = out.batches.get(k, 0) + n
+        for k, (n, tot) in other.observed.items():
+            n0, tot0 = out.observed.get(k, (0, 0.0))
+            out.observed[k] = (n0 + n, tot0 + tot)
         return out
 
     def heat(self) -> list[tuple[tuple[int, int], int]]:
@@ -305,6 +341,9 @@ class TrafficProfile:
             requests={b: n for b, n in self.requests.items() if b in keep},
             batches={
                 k: n for k, n in self.batches.items() if k[:2] in keep
+            },
+            observed={
+                k: v for k, v in self.observed.items() if k[:2] in keep
             },
         )
 
@@ -331,6 +370,10 @@ class TrafficProfile:
                 f"{v}x{d}x{s}": n
                 for (v, d, s), n in sorted(self.batches.items())
             },
+            "observed": {
+                f"{v}x{d}x{s}:{dig}": [n, tot]
+                for (v, d, s, dig), (n, tot) in sorted(self.observed.items())
+            },
         }
         return json.dumps(payload, indent=2, sort_keys=True) + "\n"
 
@@ -342,9 +385,19 @@ class TrafficProfile:
                 f"not a {TRAFFIC_FORMAT} artifact (format={d.get('format')!r})"
             )
         parse = lambda k: tuple(int(p) for p in k.split("x"))  # noqa: E731
+
+        def parse_obs(k: str) -> tuple:
+            shape, dig = k.rsplit(":", 1)
+            return (*parse(shape), dig)
+
         return cls(
             requests={parse(k): int(n) for k, n in d["requests"].items()},
             batches={parse(k): int(n) for k, n in d["batches"].items()},
+            # absent in pre-calibration profiles (back-compat)
+            observed={
+                parse_obs(k): (int(v[0]), float(v[1]))
+                for k, v in d.get("observed", {}).items()
+            },
         )
 
     def save(self, path) -> Path:

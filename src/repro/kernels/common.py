@@ -1,7 +1,10 @@
 """Shared kernel utilities."""
 from __future__ import annotations
 
+import time
+
 import jax
+import numpy as np
 
 
 def default_interpret() -> bool:
@@ -13,3 +16,38 @@ def default_interpret() -> bool:
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def measure_wall(
+    fn,
+    *,
+    warmup: int = 1,
+    iters: int = 5,
+    reduce: str = "median",
+) -> float:
+    """Wall-clock seconds of one ``fn()`` call, measured properly.
+
+    The one timing helper shared by the calibration harness, the serving
+    engine's measured re-ranking and the benchmark lanes, so warmup and
+    aggregation rules cannot drift between them:
+
+    - every call is followed by ``jax.block_until_ready`` on its result
+      (async dispatch otherwise times the enqueue, not the kernel);
+    - the first ``warmup`` calls are discarded (compilation/tracing and
+      allocator warmup land there);
+    - the remaining ``iters`` timings are reduced by ``median`` (robust
+      to scheduler noise; default), ``min`` or ``mean``.
+    """
+    if reduce not in ("median", "min", "mean"):
+        raise ValueError(
+            f"reduce must be 'median', 'min' or 'mean', got {reduce!r}"
+        )
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    agg = {"median": np.median, "min": np.min, "mean": np.mean}[reduce]
+    return float(agg(ts))

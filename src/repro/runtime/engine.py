@@ -49,6 +49,7 @@ compile+run.
 """
 from __future__ import annotations
 
+import json
 import time
 import warnings
 from collections import OrderedDict
@@ -61,8 +62,9 @@ import numpy as np
 
 from ..api import Program, compile as _compile, trace_count
 from ..core.cost_model import GNNLayerWorkload
-from ..core.hw import AcceleratorConfig, DEFAULT_ACCEL
+from ..core.hw import AcceleratorConfig, DEFAULT_ACCEL, DEFAULT_LATENCY, LatencyModel
 from ..core.schedule import ModelSchedule
+from ..kernels.common import measure_wall
 from ..graphs.batching import (
     BucketPolicy,
     GraphBatch,
@@ -210,6 +212,25 @@ class PrecompileReport:
     n_searches: int = 0  # mapper searches among the compiles
     n_traces: int = 0  # XLA traces taken while warming
     wall_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class RerankReport:
+    """What :meth:`InferenceEngine.rerank_topk` did: how many hot buckets
+    it re-ranked, how many candidate schedules it measured, which buckets
+    swapped to a measured-faster schedule (``swaps`` maps ``"VxD"`` to the
+    incumbent/winner digests and walls), and how many XLA traces the whole
+    pass took — all off the request path."""
+
+    n_buckets: int = 0
+    n_candidates: int = 0  # candidate schedules compiled and measured
+    n_swapped: int = 0  # buckets whose pinned schedule changed
+    n_traces: int = 0  # XLA traces taken while measuring + re-priming
+    wall_s: float = 0.0
+    swaps: dict = field(default_factory=dict)  # "VxD" -> swap detail
 
     def as_dict(self) -> dict:
         return asdict(self)
@@ -363,6 +384,20 @@ class InferenceEngine:
             prior = store.load_profile()
             if prior is not None:
                 self.profile = prior
+        # a fitted latency model calibrates every schedule this engine
+        # searches.  When the caller left ``hw.latency`` at the identity
+        # default, resolve one: the ``REPRO_LATENCY_MODEL`` env override
+        # first, then the store's fitted model for the running jax
+        # backend (written by ``repro.core.calibrate.calibrate``).  An
+        # explicit non-default ``hw.latency`` always wins.
+        if self.hw.latency == DEFAULT_LATENCY:
+            lm = LatencyModel.from_env()
+            if lm is None and store is not None:
+                from ..core.calibrate import backend_fingerprint
+
+                lm = store.load_latency_model(backend_fingerprint())
+            if lm is not None:
+                self.hw = dc_replace(self.hw, latency=lm)
         #: searched schedules keyed by (v_bucket, d_bucket): the mapper
         #: runs once per bucket; slot-count variants of the bucket (partial
         #: tail batches) reuse the schedule and only pay their XLA compile.
@@ -421,7 +456,9 @@ class InferenceEngine:
             # v_bucket AND v_total: buckets whose v_bucket * slots products
             # coincide (e.g. 32x2 and 64x1) must not share a Program
             (v_bucket, v_total, d_bucket),
-            tuple(sorted(asdict(self.hw).items())),
+            # canonical JSON string: asdict(hw) nests the latency-model
+            # mapping, which is not hashable as a tuple of items
+            json.dumps(asdict(self.hw), sort_keys=True),
         )
 
     def _cache_key(self, batch: GraphBatch, tier: Tier) -> tuple:
@@ -616,6 +653,160 @@ class InferenceEngine:
         rep.wall_s = time.perf_counter() - t0
         return rep
 
+    # -- measured re-ranking -------------------------------------------------
+    def rerank_topk(
+        self,
+        *,
+        top_k: int = 4,
+        max_shapes: int | None = None,
+        min_improvement: float = 0.03,
+        warmup: int = 1,
+        iters: int = 5,
+    ) -> RerankReport:
+        """Re-rank every hot bucket's schedule by *measured* wall time.
+
+        The mapper search behind each bucket minimizes the analytic cost
+        model; a calibrated :class:`~repro.core.hw.LatencyModel` narrows
+        the model<->hardware gap but cannot close it per schedule.  This
+        pass closes the loop with actual measurements, entirely off the
+        request path:
+
+        1. for each hot bucket (hottest first, bounded by ``max_shapes``),
+           take the mapper's analytic top-k
+           (:func:`~repro.core.mapper.search_model_topk`) plus the
+           incumbent schedule;
+        2. compile each candidate with a *pinned* schedule (no search)
+           and measure it on a synthetic batch of the bucket's hottest
+           slot count via :func:`~repro.kernels.common.measure_wall`
+           (``donate=False`` so the measurement buffer survives repeat
+           runs); every measurement lands in the profile's observation
+           ledger (:meth:`TrafficProfile.record_wall
+           <repro.graphs.batching.TrafficProfile.record_wall>`);
+        3. when the best candidate beats the incumbent by more than
+           ``min_improvement`` (hysteresis against timer noise), hot-swap
+           the bucket: pin the winner in the per-bucket schedule map,
+           overwrite the memory-cache entry *and* the store artifact for
+           every recorded slot variant, and re-prime the serving
+           executables with this engine's own ``donate`` mode — so the
+           next real request of the bucket re-traces nothing
+           (``repro.trace_count()`` delta of 0 on the request path).
+        """
+        if self.params is None:
+            raise ValueError(
+                "engine has no params; pass params= or call engine.init(rng)"
+            )
+        from ..core.mapper import search_model_topk
+
+        rep = RerankReport()
+        t0 = time.perf_counter()
+        traces0 = trace_count()
+        tier = self.ladder[0]
+        shapes = self.profile.hot_shapes()
+        if max_shapes is not None:
+            shapes = shapes[:max_shapes]
+        # the hottest slot variant of each bucket carries the measurement
+        # (hot_shapes is hottest-first); the other variants only get
+        # re-primed when the bucket swaps
+        hot_slots: dict[tuple[int, int], int] = {}
+        variants: dict[tuple[int, int], list[int]] = {}
+        for bucket, slots in shapes:
+            hot_slots.setdefault(bucket, slots)
+            variants.setdefault(bucket, []).append(slots)
+
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message="Some donated buffers")
+            for bucket, slots in hot_slots.items():
+                rep.n_buckets += 1
+                v_bucket, d_bucket = bucket
+                batch = self._synthetic_batch(v_bucket, d_bucket, slots)
+                incumbent = self._program_for(batch, tier)
+                wls = [
+                    GNNLayerWorkload(batch.graph.nnz, fi, fo, name=f"layer{i}")
+                    for i, (fi, fo) in enumerate(self.dims)
+                ]
+                x = jnp.zeros((batch.graph.n_nodes, self.f_in), jnp.float32)
+                seg = jnp.asarray(batch.segment_ids)
+
+                def measure(prog: Program) -> float:
+                    bound = prog.bind(batch.graph, pad_degree=batch.d_bucket)
+
+                    def run():
+                        if self.readout is None:
+                            return bound.run(self.params, x, donate=False)
+                        return bound.run(
+                            self.params,
+                            x,
+                            segment_ids=seg,
+                            num_segments=batch.slots,
+                            readout=self.readout,
+                            donate=False,
+                        )
+
+                    wall = measure_wall(run, warmup=warmup, iters=iters)
+                    self.profile.record_wall(
+                        bucket, batch.slots, prog.schedule_digest, wall
+                    )
+                    return wall
+
+                walls: dict[str, tuple[float, Program]] = {
+                    incumbent.schedule_digest: (measure(incumbent), incumbent)
+                }
+                for cand in search_model_topk(
+                    wls, hw=self.hw, objective=self.objective, top_k=top_k
+                ):
+                    dig = cand.digest()
+                    if dig in walls:
+                        continue
+                    prog = _compile(
+                        wls,
+                        hw=self.hw,
+                        objective=self.objective,
+                        schedule=cand,
+                        kind=self.kind,
+                        use_pallas=tier.use_pallas,
+                    )
+                    rep.n_candidates += 1
+                    walls[dig] = (measure(prog), prog)
+                best_dig, (best_wall, best_prog) = min(
+                    walls.items(), key=lambda kv: kv[1][0]
+                )
+                inc_wall = walls[incumbent.schedule_digest][0]
+                if (
+                    best_dig == incumbent.schedule_digest
+                    or best_wall >= inc_wall * (1.0 - min_improvement)
+                ):
+                    continue
+                rep.n_swapped += 1
+                self._schedules[bucket] = best_prog.schedule
+                rep.swaps[f"{v_bucket}x{d_bucket}"] = {
+                    "from": incumbent.schedule_digest,
+                    "to": best_dig,
+                    "incumbent_wall_s": inc_wall,
+                    "winner_wall_s": best_wall,
+                    "improvement": 1.0 - best_wall / inc_wall,
+                }
+                for sv in variants[bucket]:
+                    vb = self._synthetic_batch(v_bucket, d_bucket, sv)
+                    self.cache.put(self._cache_key(vb, tier), best_prog)
+                    if self.store is not None:
+                        self.store.put(self._store_key(vb, tier), best_prog)
+                    bound = best_prog.bind(vb.graph, pad_degree=vb.d_bucket)
+                    if self.readout is None:
+                        bound.prime(self.params, donate=self.donate)
+                    else:
+                        bound.prime(
+                            self.params,
+                            segment_ids=jnp.asarray(vb.segment_ids),
+                            num_segments=vb.slots,
+                            readout=self.readout,
+                            donate=self.donate,
+                        )
+        if self.store is not None:
+            self.store.save_profile(self.profile)
+        rep.n_traces = trace_count() - traces0
+        rep.wall_s = time.perf_counter() - t0
+        return rep
+
     # -- admission -----------------------------------------------------------
     def median_batch_wall(self) -> float:
         """Recent median micro-batch wall time (the engine's drain rate);
@@ -641,7 +832,12 @@ class InferenceEngine:
         f_max = max(max(fi, fo) for fi, fo in self.dims)
         return self.policy.oversized_reason(graph, f=f_max, hw=self.hw)
 
-    def _admission_error(self, req: Request, n_admitted: int) -> ServingError | None:
+    def _admission_error(
+        self, req: Request, inflight_units: int
+    ) -> ServingError | None:
+        """Validity, size and load checks for one request.
+        ``inflight_units`` is the work already admitted this call in
+        batch-slot units (a partitioned giant counts ``n_partitions``)."""
         try:
             validate_request(req, self.f_in)
             reason = self.oversized_reason(req.graph)
@@ -649,9 +845,9 @@ class InferenceEngine:
                 raise OversizedGraph(f"request {req.rid}: {reason}")
             if (
                 self.max_inflight_graphs is not None
-                and n_admitted >= self.max_inflight_graphs
+                and inflight_units >= self.max_inflight_graphs
             ):
-                hint = self._retry_after_hint(n_admitted)
+                hint = self._retry_after_hint(inflight_units)
                 raise EngineOverloaded(
                     f"request {req.rid}: engine at max_inflight_graphs="
                     f"{self.max_inflight_graphs}; retry after {hint:.3f}s",
@@ -699,12 +895,60 @@ class InferenceEngine:
 
         admitted: list[int] = []
         partitioned: list[int] = []
+        # admission charges *work units*, not request count: a normal
+        # request is one batch slot, but an oversized request fans out
+        # into plan.n_partitions device launches — charging only 1 would
+        # let one giant blow straight through max_inflight_graphs
+        inflight_units = 0
         for pos, req in enumerate(requests):
-            err = self._admission_error(req, len(admitted))
+            err = self._admission_error(req, inflight_units)
             if err is None:
                 admitted.append(pos)
+                inflight_units += 1
             elif self.partition_oversized and isinstance(err, OversizedGraph):
-                partitioned.append(pos)
+                try:
+                    units = self._plan_for(req.graph).n_partitions
+                except ValueError:
+                    # unplannable: admit with one unit; the partitioned
+                    # lane fails it with the typed OversizedGraph cause
+                    units = 1
+                if (
+                    self.max_inflight_graphs is not None
+                    and inflight_units > 0
+                    and inflight_units + units > self.max_inflight_graphs
+                ):
+                    # over the cap *and* not first in line — shed it with
+                    # a hint sized to its real backlog contribution.  An
+                    # empty engine always admits one giant (units may
+                    # exceed the cap outright; progress beats starvation).
+                    hint = self._retry_after_hint(inflight_units + units)
+                    err = EngineOverloaded(
+                        f"request {req.rid}: {units} partition units would "
+                        f"exceed max_inflight_graphs="
+                        f"{self.max_inflight_graphs} "
+                        f"({inflight_units} units in flight); "
+                        f"retry after {hint:.3f}s",
+                        retry_after_s=hint,
+                    )
+                else:
+                    partitioned.append(pos)
+                    inflight_units += units
+                    continue
+                self._record(
+                    results,
+                    pos,
+                    Result(
+                        rid=req.rid,
+                        output=None,
+                        bucket=None,
+                        latency_s=time.perf_counter() - t_submit,
+                        status=err.status,
+                        error=str(err),
+                        error_type=err.code,
+                        retry_after_s=err.retry_after_s,
+                    ),
+                    err,
+                )
             else:
                 self._record(
                     results,
@@ -1254,18 +1498,28 @@ class InferenceEngine:
                 donate=donate,
             )
         arr = np.asarray(jax.block_until_ready(out))
-        if trace_count() > traces_before:
+        wall = time.perf_counter() - t_run
+        traced = trace_count() > traces_before
+        if traced:
             # first execution on a cold shape: this wall is dominated by
             # the XLA trace + compile (or the persistent-cache load), so
             # attribute it to trace_s — that is exactly what precompile()
             # and the compilation cache save a revived engine.
-            self._trace_s += time.perf_counter() - t_run
+            self._trace_s += wall
         if corrupt == "nan":
             arr = self.injector.corrupt_output(arr)
         if self.check_numerics and not np.isfinite(arr).all():
             raise NumericalFault(
                 f"non-finite values in the output of bucket {bucket_key} "
                 f"batch {batch_index} (tier {tier.name}, rids {rids})"
+            )
+        if not traced and corrupt is None:
+            # clean warm run: fold the measured wall into the traffic
+            # profile's observation ledger keyed by the schedule that
+            # produced it — the feedback half of the predicted<->measured
+            # loop that rerank_topk() re-scores candidates against.
+            self.profile.record_wall(
+                bucket_key, batch.slots, prog.schedule_digest, wall
             )
         if self.readout is None:
             return batch.split_nodes(arr)

@@ -59,6 +59,10 @@ JAX_CACHE_ENV = "REPRO_JAX_CACHE_DIR"
 _INDEX = "index.json"
 _PROFILE = "traffic.json"
 _SUFFIX = ".program.json"
+_LATENCY = "latency_model.json"
+
+#: LatencyModel collection file schema version.
+LATENCY_STORE_FORMAT = "repro.latency-store/v1"
 
 
 def store_key(
@@ -235,6 +239,66 @@ class ProgramStore:
             return TrafficProfile.load(self.profile_path)
         except FileNotFoundError:
             return None
+        except Exception:
+            with self._lock:
+                self.corrupt += 1
+            return None
+
+    # -- fitted latency models ----------------------------------------------
+    @property
+    def latency_path(self) -> Path:
+        return self.root / _LATENCY
+
+    def save_latency_model(self, model) -> Path:
+        """Persist a fitted :class:`~repro.core.hw.LatencyModel` beside
+        the program artifacts, keyed by the backend fingerprint it was
+        measured on (one file holds all backends; saving merges)."""
+        from ..core.hw import LatencyModel
+
+        if not isinstance(model, LatencyModel):
+            raise TypeError(f"expected a LatencyModel, got {type(model).__name__}")
+        if not model.backend:
+            raise ValueError(
+                "refusing to store a LatencyModel with no backend "
+                "fingerprint — fit it via repro.core.calibrate"
+            )
+        with self._lock:
+            models = self._load_latency_models()
+            entry = json.loads(model.to_json())
+            entry.pop("format")
+            models[model.backend] = entry
+            payload = {"format": LATENCY_STORE_FORMAT, "models": models}
+            _atomic_write_text(
+                self.latency_path,
+                json.dumps(payload, indent=2, sort_keys=True) + "\n",
+            )
+        return self.latency_path
+
+    def _load_latency_models(self) -> dict:
+        try:
+            d = json.loads(self.latency_path.read_text())
+            if d.get("format") != LATENCY_STORE_FORMAT:
+                raise ValueError(f"latency store format {d.get('format')!r}")
+            return dict(d["models"])
+        except FileNotFoundError:
+            return {}
+        except Exception:
+            self.corrupt += 1
+            return {}
+
+    def load_latency_model(self, backend: str):
+        """The fitted model for ``backend`` (a
+        :func:`~repro.core.calibrate.backend_fingerprint` string), or
+        ``None`` when absent/unreadable — same corruption tolerance as
+        :meth:`get`."""
+        from ..core.hw import LatencyModel
+
+        with self._lock:
+            entry = self._load_latency_models().get(backend)
+        if entry is None:
+            return None
+        try:
+            return LatencyModel(**entry)
         except Exception:
             with self._lock:
                 self.corrupt += 1

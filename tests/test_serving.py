@@ -287,3 +287,90 @@ class TestInferenceEngine:
         eng.submit(reqs)  # 4-slot batch + 1-slot tail: two cache keys
         assert eng.cache.misses == 2
         assert len(eng._schedules) == 1  # but one mapper search
+
+
+class TestPartitionAwareAdmission:
+    """Oversized requests charge ``n_partitions`` units against
+    ``max_inflight_graphs``, not one batch slot."""
+
+    POL = BucketPolicy(min_nodes=16, min_degree=4, max_nodes=64)
+
+    def engine(self, cap: int):
+        eng = InferenceEngine(
+            DIMS, policy=self.POL, partition_oversized=True,
+            max_inflight_graphs=cap,
+        )
+        eng.init(jax.random.PRNGKey(0))
+        return eng
+
+    def giant(self, rid: int = 100) -> Request:
+        return make_request(200, seed=7, rid=rid)
+
+    def test_giant_charges_partition_units(self):
+        eng = self.engine(cap=4)
+        smalls = [make_request(24, seed=i + 1, rid=i) for i in range(3)]
+        res = eng.submit([self.giant()] + smalls)
+        g = res[0]
+        assert g.ok and g.n_partitions >= 2
+        # the giant's fan-out filled the budget its partitions consume
+        slots_left = max(0, 4 - g.n_partitions)
+        n_shed = sum(r.status == "rejected" for r in res[1:])
+        assert n_shed == max(0, len(smalls) - slots_left)
+        shed = [r for r in res[1:] if r.status == "rejected"]
+        assert all(r.error_type == "engine_overloaded" for r in shed)
+        assert all(r.retry_after_s > 0 for r in shed)
+
+    def test_giant_behind_full_batch_is_shed_with_unit_hint(self):
+        eng = self.engine(cap=4)
+        smalls = [make_request(24, seed=i + 1, rid=i) for i in range(4)]
+        res = eng.submit(smalls + [self.giant()])
+        assert all(r.ok for r in res[:-1])
+        g = res[-1]
+        assert g.status == "rejected"
+        assert g.error_type == "engine_overloaded"
+        assert g.retry_after_s is not None and g.retry_after_s > 0
+        assert "partition units" in g.error  # unit-aware shed path
+
+    def test_empty_engine_always_admits_one_giant(self):
+        # its units exceed the cap outright, but an empty engine must
+        # make progress rather than starve the giant forever
+        eng = self.engine(cap=2)
+        res = eng.submit([self.giant(rid=1)])
+        assert res[0].ok and res[0].n_partitions > 2
+
+
+class TestMeasuredRerank:
+    """Warm batches log measured walls; rerank_topk swaps off-path."""
+
+    POL = BucketPolicy(min_nodes=16, min_degree=4, max_graphs=4)
+
+    def engine(self, **kw):
+        eng = InferenceEngine(DIMS, policy=self.POL, **kw)
+        eng.init(jax.random.PRNGKey(0))
+        return eng
+
+    def test_warm_submit_records_wall_observations(self):
+        eng = self.engine()
+        reqs = [make_request(12, seed=i, rid=i) for i in range(4)]
+        eng.submit(reqs)  # cold: traces, no observation
+        assert not eng.profile.observed
+        eng.submit(reqs)  # warm: one observation per micro-batch
+        assert eng.profile.observed
+        (v, d, slots, digest), (n, tot) = next(iter(eng.profile.observed.items()))
+        assert (v, d) in eng._buckets_seen and n >= 1 and tot > 0
+        assert eng.profile.mean_wall((v, d), slots, digest) > 0
+
+    def test_rerank_is_trace_free_on_request_path(self):
+        eng = self.engine()
+        reqs = [make_request(12, seed=i, rid=i) for i in range(4)]
+        eng.submit(reqs)
+        eng.submit(reqs)
+        rep = eng.rerank_topk(top_k=2, iters=2, warmup=1)
+        assert rep.n_buckets >= 1
+        assert rep.n_candidates >= 1
+        before = repro.trace_count()
+        res = eng.submit(reqs)
+        assert all(r.ok for r in res)
+        assert repro.trace_count() == before, (
+            "rerank_topk leaked XLA traces onto the request path"
+        )
